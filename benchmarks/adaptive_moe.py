@@ -1,0 +1,85 @@
+"""Framework-level benchmark: invariant-governed MoE expert placement vs
+unconditional / threshold re-placement under drifting routing loads.
+
+The MoE analogue of Figures 6-9: the governor should match the best
+placement quality (load imbalance ~ straggler time) with a fraction of the
+re-placements (each re-placement = an expert-weight all-to-all + re-entry,
+the deployment cost)."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.adaptive.placement import (ExpertPlacementGovernor, imbalance,
+                                      lpt_placement)
+
+
+def drifting_loads(rng, e, steps, regime="traffic"):
+    """Synthetic per-expert token loads with the two regimes of §5.1."""
+    base = rng.uniform(1, 10, e)
+    for t in range(steps):
+        if regime == "traffic":
+            if rng.random() < 0.02:  # rare large shift
+                i, j = rng.choice(e, 2, replace=False)
+                base[i], base[j] = base[j] * 4, base[i] / 4
+            yield base * rng.uniform(0.95, 1.05, e)
+        else:  # stocks: frequent small drift
+            base *= np.exp(rng.normal(0, 0.02, e))
+            yield base.copy()
+
+
+def run_policy(policy: str, loads_seq, e, groups, d=0.1):
+    replans = deploys = 0
+    total_imb = 0.0
+    n = 0
+    if policy == "invariant":
+        gov = ExpertPlacementGovernor(e, groups, d=d, ema=0.7)
+        for loads in loads_seq:
+            gov.observe(loads)
+            total_imb += imbalance(gov._loads, gov.placement)
+            n += 1
+        return gov.replans, gov.deployments, total_imb / n
+    placement = None
+    ref = None
+    for loads in loads_seq:
+        fire = False
+        if policy == "unconditional" or placement is None:
+            fire = True
+        elif policy == "threshold":
+            dev = np.abs(loads - ref) / np.maximum(np.abs(ref), 1e-9)
+            fire = bool((dev >= 0.4).any())
+        if fire:
+            replans += 1
+            new_p, _ = lpt_placement(loads, groups)
+            ref = loads.copy()
+            if placement is None or new_p.groups != placement.groups:
+                placement = new_p
+                deploys += 1
+        total_imb += imbalance(loads, placement)
+        n += 1
+    return replans, deploys, total_imb / n
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--experts", type=int, default=64)
+    ap.add_argument("--groups", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args(argv)
+    steps = 150 if (quick or args.quick) else args.steps
+
+    print("regime,policy,replans,deployments,avg_imbalance")
+    for regime in ("traffic", "stocks"):
+        for policy in ("unconditional", "threshold", "invariant"):
+            rng = np.random.default_rng(0)
+            seq = list(drifting_loads(rng, args.experts, steps, regime))
+            r, dep, imb = run_policy(policy, seq, args.experts,
+                                     args.groups)
+            print(f"{regime},{policy},{r},{dep},{imb:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Figure 5: throughput of the invariant method vs the distance ``d``.
+
+For each (dataset × algorithm) the paper sweeps d in [0, 0.5] over the
+sequence pattern set and finds a unimodal curve with an optimum d_opt.
+Output: CSV rows + the located d_opt per combination (consumed by
+table1_davg.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import HEADER, run_one
+
+D_GRID = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/fig5.json")
+    args = ap.parse_args(argv)
+    quick = quick or args.quick
+
+    sizes = [4] if quick else [3, 4, 5, 6, 7, 8]
+    grid = D_GRID if not quick else [0.0, 0.2, 0.4]
+    n_chunks = 60 if quick else 120
+    combos = ([("traffic", "greedy"), ("stocks", "greedy")] if quick else
+              [(ds, al) for ds in ("traffic", "stocks")
+               for al in ("greedy", "zstream")])
+
+    print(HEADER)
+    d_opt = {}
+    for dataset, algo in combos:
+        best = {}
+        for size in sizes:
+            for d in grid:
+                r = run_one(dataset, algo, "seq", size, "invariant", d=d,
+                            n_chunks=n_chunks)
+                print(r.row(), flush=True)
+                key = (dataset, algo, size)
+                if key not in best or r.throughput > best[key][1]:
+                    best[key] = (d, r.throughput)
+        for (ds, al, size), (d, thr) in best.items():
+            d_opt[f"{ds}/{al}/{size}"] = d
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(d_opt, f, indent=1)
+    print("# d_opt:", d_opt)
+
+
+if __name__ == "__main__":
+    main()

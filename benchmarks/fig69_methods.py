@@ -1,0 +1,71 @@
+"""Figures 6-9 (+ Appendix A): the four adaptation methods compared per
+(dataset × algorithm × pattern set × size): throughput, gain over static,
+number of reoptimizations, computational overhead."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import HEADER, PATTERN_SETS, run_one
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sets", default=None,
+                    help="comma list of pattern sets (default: per mode)")
+    ap.add_argument("--d-opt", default="results/fig5.json")
+    ap.add_argument("--out", default="results/fig69.json")
+    args = ap.parse_args(argv)
+    quick = quick or args.quick
+
+    d_opt = {}
+    if os.path.exists(args.d_opt):
+        with open(args.d_opt) as f:
+            d_opt = json.load(f)
+
+    sets = (args.sets.split(",") if args.sets else
+            (["seq"] if quick else PATTERN_SETS))
+    sizes = [4] if quick else [3, 4, 6, 8]
+    combos = ([("traffic", "greedy"), ("stocks", "greedy")] if quick else
+              [(ds, al) for ds in ("traffic", "stocks")
+               for al in ("greedy", "zstream")])
+    n_chunks = 60 if quick else 120
+
+    print(HEADER)
+    rows = []
+    for dataset, algo in combos:
+        for set_name in sets:
+            base = None
+            for policy in ("static", "unconditional", "threshold",
+                           "invariant"):
+                for size in sizes:
+                    d = d_opt.get(f"{dataset}/{algo}/{size}", 0.2)
+                    r = run_one(dataset, algo, set_name, size, policy,
+                                d=d, n_chunks=n_chunks)
+                    rows.append(r)
+                    print(r.row(), flush=True)
+
+    # relative gains summary (Figures 6b-9b)
+    by = {}
+    for r in rows:
+        by.setdefault((r.dataset, r.algo, r.pattern_set, r.size), {})[
+            r.policy] = r
+    print("# gain-over-static (dataset, algo, set, size): "
+          "unconditional / threshold / invariant")
+    for key, d_ in sorted(by.items()):
+        if "static" not in d_:
+            continue
+        s = d_["static"].throughput
+        gains = [d_.get(p).throughput / s if d_.get(p) else float("nan")
+                 for p in ("unconditional", "threshold", "invariant")]
+        print(f"# {key}: " + " / ".join(f"{g:.2f}x" for g in gains))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump([r.__dict__ for r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""window_join kernel microbenchmark: jnp oracle vs Pallas (interpret on
+CPU; the pallas path is the TPU deployment target) across join shapes."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import ops
+
+
+def bench(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    quick = quick or args.quick
+    rng = np.random.default_rng(0)
+    shapes = [(8, 256, 128), (12, 1024, 256), (16, 4096, 256)]
+    if quick:
+        shapes = shapes[:2]
+    print("name,us_per_call,derived")
+    for C, M, B in shapes:
+        L = rng.normal(size=(C, M)).astype(np.float32)
+        R = rng.normal(size=(C, B)).astype(np.float32)
+        op = rng.integers(1, 4, size=(C,)).astype(np.int32)
+        th = rng.normal(scale=0.5, size=(C,)).astype(np.float32)
+        ref_jit = jax.jit(
+            lambda a, b, o, t: ops.window_join(a, b, o, t, backend="ref"))
+        t_ref = bench(lambda: ref_jit(L, R, op, th))
+        cmp_per_s = C * M * B / (t_ref * 1e-6)
+        print(f"window_join_ref_C{C}_M{M}_B{B},{t_ref:.1f},"
+              f"{cmp_per_s:.3g}cmp/s")
+        # interpret mode is a CORRECTNESS harness (python-executed kernel
+        # body); time it once for the record, not as a perf claim.
+        if quick:
+            continue
+        t_int = bench(lambda: ops.window_join(L, R, op, th,
+                                              backend="interpret"),
+                      iters=2)
+        print(f"window_join_interpret_C{C}_M{M}_B{B},{t_int:.1f},"
+              "correctness-harness")
+
+
+if __name__ == "__main__":
+    main()

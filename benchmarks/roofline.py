@@ -1,0 +1,132 @@
+"""Roofline table: aggregate the dry-run JSON records into the per-cell
+three-term analysis (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_single_*.json (and _multi_ for the multi-pod pass
+status) and emits a markdown table: per (arch × shape) the compute /
+memory / collective seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs,
+per-device memory, and the bottleneck note.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(pattern: str) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            out.extend(json.load(f))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def note_for(rec: dict) -> str:
+    dom = rec["dominant"]
+    if dom == "compute":
+        return ("raise MXU utilization: bigger per-chip tiles / reduce "
+                "remat recompute")
+    if dom == "memory":
+        return ("cut HBM traffic: fuse/reuse activations, bf16 "
+                "everywhere, larger arithmetic intensity per pass")
+    return ("cut collective bytes: reshard to reduce all-gathers / "
+            "overlap with compute / compress")
+
+
+def table(records: List[dict], multi: Dict[str, str]) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO | GB/dev | multi-pod | what would move the "
+        "dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if rec["status"] == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | — | — | "
+                f"— | — | SKIP: {rec['reason'][:60]}… |")
+            continue
+        if rec["status"] == "error":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | ERR | | | | | | | "
+                f"{rec['error'][:80]} |")
+            continue
+        if rec.get("rolled"):
+            mem = rec.get("memory", {})
+            gb = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)
+                  - mem.get("alias_size_in_bytes", 0)) / 1e9
+            mp = multi.get(f"{rec['arch']}/{rec['shape']}", "?")
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | — | — | "
+                f"{gb:.1f} | {mp} | compiled (rolled fast mode; exact "
+                "FLOP accounting pending) |")
+            continue
+        mem = rec.get("memory", {})
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)
+              - mem.get("alias_size_in_bytes", 0)) / 1e9
+        mp = multi.get(f"{rec['arch']}/{rec['shape']}", "?")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | "
+            f"{fmt_s(rec['compute_s'])} | {fmt_s(rec['memory_s'])} | "
+            f"{fmt_s(rec['collective_s'])} | **{rec['dominant']}** | "
+            f"{rec['useful_flops_ratio']:.2f} | {gb:.1f} | {mp} | "
+            f"{note_for(rec)} |")
+    return "\n".join(lines)
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    single = load(os.path.join(args.dir, "dryrun_single_*.json"))
+    multi_recs = load(os.path.join(args.dir, "dryrun_multi_*.json"))
+    multi = {}
+    for r in multi_recs:
+        key = f"{r['arch']}/{r['shape']}"
+        multi[key] = ("ok" if r["status"] == "ok" else
+                      "skip" if r["status"] == "skipped" else "ERR")
+
+    order = {(a, s): (i, SHAPE_ORDER.index(s) if s in SHAPE_ORDER else 9)
+             for i, a in enumerate(sorted({r["arch"] for r in single}))
+             for s in SHAPE_ORDER}
+    single.sort(key=lambda r: order.get((r["arch"], r["shape"]),
+                                        (99, 99)))
+    print(table(single, multi))
+    ok = [r for r in single if r["status"] == "ok"]
+    if ok:
+        print(f"\n# cells ok={len(ok)} "
+              f"skipped={sum(r['status'] == 'skipped' for r in single)} "
+              f"error={sum(r['status'] == 'error' for r in single)}")
+        worst = sorted(
+            ok, key=lambda r: r["model_flops"]
+            / max(r["hlo_flops"] * r["n_chips"], 1)
+        )[:3]
+        print("# worst useful-flops cells:",
+              [(r["arch"], r["shape"],
+                round(r["useful_flops_ratio"], 3)) for r in worst])
+        collbound = [r for r in ok if r["dominant"] == "collective"]
+        print("# collective-bound cells:",
+              [(r["arch"], r["shape"]) for r in collbound])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark aggregator: one harness per paper table/figure + the
+framework-level benchmarks.  Default mode is `--quick` scale (bounded
+minutes on a 1-core CPU container); pass --full for the complete grids.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,table1,fig69,kernel,moe,"
+                         "roofline")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (adaptive_moe, fig5_distance, fig69_methods,
+                   kernel_bench, roofline, table1_davg)
+
+    sections = [
+        ("fig5", "Figure 5 — throughput vs invariant distance d",
+         lambda: fig5_distance.main([], quick=quick)),
+        ("table1", "Table 1 — d_avg estimate quality",
+         lambda: table1_davg.main([], quick=quick)),
+        ("fig69", "Figures 6-9 — adaptation method comparison",
+         lambda: fig69_methods.main([], quick=quick)),
+        ("kernel", "window_join kernel microbenchmark",
+         lambda: kernel_bench.main([], quick=quick)),
+        ("moe", "adaptive MoE expert placement",
+         lambda: adaptive_moe.main([], quick=quick)),
+        ("roofline", "roofline table from dry-run artifacts",
+         lambda: roofline.main([], quick=quick)),
+    ]
+    for key, title, fn in sections:
+        if only and key not in only:
+            continue
+        print(f"\n===== {title} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 - keep the suite running
+            print(f"!! {key} failed: {type(e).__name__}: {e}")
+        print(f"===== {key} done in {time.time()-t0:.1f}s =====",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

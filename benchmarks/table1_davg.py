@@ -1,0 +1,65 @@
+"""Table 1: quality of the average-relative-difference estimate d_avg
+(§3.4 approach 2) vs the empirically optimal d_opt from the Figure-5
+sweep: min(d_avg/d_opt, d_opt/d_avg) per (dataset × algo × size)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.adaptation import AdaptiveRunner
+from repro.core.decision import InvariantPolicy
+from repro.core.engine import EngineConfig
+from repro.data.cep_streams import StreamConfig, make_stream
+
+from .common import build_pattern
+
+
+def measure_d_avg(dataset: str, algo: str, size: int,
+                  n_chunks: int = 60) -> float:
+    pat = build_pattern("seq", size)
+    pol = InvariantPolicy(k=1, d_mode="avg")
+    runner = AdaptiveRunner(
+        pat, planner=algo, policy=pol,
+        engine_cfg=EngineConfig(b_cap=128, m_cap=512),
+        adaptive_caps=True)
+    scfg = StreamConfig(n_types=size, n_attrs=1, n_chunks=n_chunks,
+                        chunk_cap=512, base_rate=15.0, seed=3)
+    runner.run(make_stream(dataset, scfg))
+    return float(getattr(pol, "d_estimated", 0.0))
+
+
+def main(argv=None, quick: bool = False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--d-opt", default="results/fig5.json")
+    args = ap.parse_args(argv)
+    quick = quick or args.quick
+
+    d_opt = {}
+    if os.path.exists(args.d_opt):
+        with open(args.d_opt) as f:
+            d_opt = json.load(f)
+
+    sizes = [4] if quick else [4, 5, 6, 7, 8]
+    combos = ([("traffic", "greedy")] if quick else
+              [(ds, al) for ds in ("traffic", "stocks")
+               for al in ("greedy", "zstream")])
+    print("dataset,algo,size,d_avg,d_opt,quality")
+    for dataset, algo in combos:
+        for size in sizes:
+            davg = measure_d_avg(dataset, algo, size)
+            dopt = d_opt.get(f"{dataset}/{algo}/{size}", 0.2)
+            if davg <= 0 or dopt <= 0:
+                q = 0.0
+            else:
+                q = min(davg / dopt, dopt / davg)
+            print(f"{dataset},{algo},{size},{davg:.4f},{dopt:.4f},{q:.3f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

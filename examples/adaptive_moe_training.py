@@ -1,0 +1,20 @@
+"""The paper's technique as a framework feature: train a (reduced)
+DeepSeekMoE model with the invariant-governed expert-placement governor
+watching per-expert routing loads — re-placement (the expensive expert
+all-to-all + re-entry) triggers only on invariant violation.
+
+    PYTHONPATH=src python examples/adaptive_moe_training.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "deepseek-moe-16b", "--smoke",
+        "--steps", "60", "--batch", "8", "--seq", "64",
+        "--adaptive-placement", "--log-every", "10",
+    ])

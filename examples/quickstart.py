@@ -1,0 +1,46 @@
+"""Quickstart: the paper end-to-end in one page.
+
+Detect SEQ(A,B,C,D) with chained attribute predicates over a skewed,
+shifting event stream; compare the static plan against the invariant-based
+adaptive method (paper §3).  Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (AdaptiveRunner, EngineConfig, make_policy,
+                        seq_pattern)
+from repro.core.patterns import chain_predicates
+from repro.data.cep_streams import StreamConfig, make_stream
+
+# 1. A pattern: four event types in temporal order, adjacent attributes
+#    must decrease (theta < 0 tightens selectivity), 4s time window.
+pattern = seq_pattern(
+    [0, 1, 2, 3], window=4.0,
+    predicates=chain_predicates([0, 1, 2, 3], theta=-0.3))
+
+# 2. A traffic-like stream: skewed arrival rates, rare extreme shifts.
+stream_cfg = StreamConfig(n_types=4, n_chunks=120, chunk_cap=512,
+                          base_rate=15.0, seed=7)
+
+# 3. Two systems: a static plan vs invariant-governed adaptation.
+for name, policy in [
+    ("static   ", make_policy("static")),
+    ("invariant", make_policy("invariant", k=1, d=0.0)),
+]:
+    runner = AdaptiveRunner(
+        pattern, planner="greedy", policy=policy,
+        engine_cfg=EngineConfig(b_cap=128, m_cap=2048),
+        adaptive_caps=True, measure_regret=True)
+    m = runner.run(make_stream("traffic", stream_cfg))
+    print(f"{name}: matches={m.full_matches:5d} "
+          f"partial-matches={m.pm_created:7d} "
+          f"A-invocations={m.replans:3d} deployments={m.deployments} "
+          f"false-positives={m.false_positives} "
+          f"plan-regret={m.regret / max(m.regret_samples, 1):.3f}")
+
+print("\nSame detections, fewer partial matches, provably-justified "
+      "replans — that is the paper's contribution.")

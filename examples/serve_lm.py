@@ -1,0 +1,16 @@
+"""Batched LM serving with the invariant-governed adaptive batch planner:
+requests in three prompt-length classes, continuous batching over a fixed
+slot pool, prefill bucketing, one compiled decode step.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "olmo-1b", "--smoke", "--requests", "16",
+          "--slots", "4", "--cache-len", "256", "--max-new", "12"])

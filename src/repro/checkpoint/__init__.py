@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic save, retention, async writer,
+cross-mesh resharding restore."""
+
+from .manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,27 @@
+"""The paper's contribution: adaptive CEP with invariant-based
+reoptimization decisions.
+
+Control plane: instrumented plan generators (``greedy``, ``zstream``),
+invariant machinery (``invariants``), decision policies (``decision``),
+statistics estimation (``stats``), the detection-adaptation loop
+(``adaptation``).  Data plane: the vectorized engine (``engine``) backed by
+the ``repro.kernels`` window-join kernel.
+"""
+
+from .adaptation import AdaptiveRunner, RunMetrics  # noqa: F401
+from .decision import make_policy  # noqa: F401
+from .engine import EngineConfig, OrderEngine, TreeEngine  # noqa: F401
+from .greedy import greedy_order_plan  # noqa: F401
+from .invariants import InvariantSet, d_avg_estimate  # noqa: F401
+from .patterns import (  # noqa: F401
+    CompositePattern,
+    Pattern,
+    Predicate,
+    and_pattern,
+    kleene_pattern,
+    neg_pattern,
+    seq_pattern,
+)
+from .plans import OrderPlan, TreePlan, plan_cost  # noqa: F401
+from .stats import SlidingWindowEstimator, Stat  # noqa: F401
+from .zstream import zstream_tree_plan  # noqa: F401

@@ -1,0 +1,562 @@
+"""Vectorized CEP evaluation engine (data plane) in JAX.
+
+Classical CEP engines (lazy-NFA [36], ZStream [42]) are event-at-a-time
+pointer-chasing state machines — the worst possible shape for a TPU.  This
+module re-thinks the data structures for the TPU memory hierarchy while
+preserving the paper's semantics and cost model:
+
+* **Per-type ring buffers** hold the recent stream history (struct-of-arrays,
+  fixed capacity, masked).
+* **Match sets are dense masked tensors**: a set of (partial) matches is a
+  ``(M_cap, n)`` timestamp/attribute block plus a validity mask and a
+  position-membership vector.
+* **Every plan step is one masked windowed cross-join** — a stack of ``C``
+  constraint rows (validity, time window, sequence order, pairwise
+  predicates) evaluated between ``M`` partial matches and ``B`` candidate
+  events by the ``window_join`` kernel (Pallas on TPU, jnp oracle on CPU),
+  followed by prefix-sum compaction.  The number of surviving pairs is
+  exactly the partial-match count the paper's plans minimize, so plan
+  quality maps 1:1 onto join work.
+
+* **Plans are data, not code.**  An order-based plan enters as a length-``n``
+  permutation vector; a tree-based plan as ``(n-1, 2)`` slot-join indices.
+  One compiled executor therefore serves *every* plan of a given pattern —
+  an adaptation (plan switch) never recompiles the data plane.  This is the
+  TPU-native answer to the paper's requirement that plan deployment be cheap
+  relative to detection (§2.2).
+
+Chunked semantics: the engine consumes the stream in chunks ``(t0, t1]``.
+Each chunk is ingested into the ring buffers, the full join cascade runs
+over the in-window history, and a match is **counted exactly once** — in the
+chunk where its latest event arrives (``max_ts ∈ (t0, t1]``).  This is the
+sliding-window re-evaluation formulation: it preserves SASE detection
+semantics while keeping every tensor shape static.
+
+Operator support beyond SEQ/AND (§2.1, via the paper's transformation-rule
+approach): negation is a post-join anti-filter against the negated type's
+buffer; Kleene closure is a bounded companion count per base match
+(count-only semantics — see DESIGN.md); OR-composites are evaluated as
+independent branches by the adaptation layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .patterns import PRED_GT, PRED_LT, PRED_NONE, Pattern
+from .plans import OrderPlan, TreeNode, TreePlan
+
+_LT = PRED_LT
+_GT = PRED_GT
+_NONE = PRED_NONE
+
+
+class Chunk(NamedTuple):
+    """One stream chunk (struct-of-arrays)."""
+
+    type_id: jax.Array  # (N,) i32 global event-type ids
+    ts: jax.Array       # (N,) f32 timestamps (non-decreasing)
+    attr: jax.Array     # (N, A) f32 attributes
+    valid: jax.Array    # (N,) bool
+
+
+class Buffers(NamedTuple):
+    """Per-position ring buffers (+ one extra row for a negated type)."""
+
+    ts: jax.Array      # (T, B) f32
+    attr: jax.Array    # (T, B, A) f32
+    valid: jax.Array   # (T, B) bool
+    ptr: jax.Array     # (T,) i32 cumulative writes
+
+
+class MatchSet(NamedTuple):
+    """A dense masked set of (partial) matches."""
+
+    ts: jax.Array       # (M, n) f32 per-position timestamps
+    attr: jax.Array     # (M, n, A) f32 per-position attributes
+    min_ts: jax.Array   # (M,) f32
+    max_ts: jax.Array   # (M,) f32
+    valid: jax.Array    # (M,) bool
+    member: jax.Array   # (n,) bool — positions filled in this set
+
+
+class StepResult(NamedTuple):
+    full_matches: jax.Array        # i32 — completed this chunk
+    pm_created: jax.Array          # i32 — total partial matches materialized
+    overflow: jax.Array            # i32 — candidates dropped by capacity
+    closure_expansions: jax.Array  # i32 — Kleene companion count
+    neg_rejected: jax.Array        # i32 — matches vetoed by negation
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    b_cap: int = 128   # ring-buffer capacity per event type
+    m_cap: int = 256   # match-set row capacity (>= b_cap)
+    backend: Optional[str] = None  # kernel backend override
+
+    def __post_init__(self):
+        if self.m_cap < self.b_cap:
+            raise ValueError("m_cap must be >= b_cap")
+
+
+# ---------------------------------------------------------------------------
+# Shared join machinery
+# ---------------------------------------------------------------------------
+
+
+def _rows_to_stacks(rows, m, b):
+    """rows: list of (lvals (M,), rvals (B,), op scalar, theta scalar)."""
+    L = jnp.stack([jnp.broadcast_to(r[0], (m,)).astype(jnp.float32)
+                   for r in rows])
+    R = jnp.stack([jnp.broadcast_to(r[1], (b,)).astype(jnp.float32)
+                   for r in rows])
+    ops_ = jnp.stack([jnp.asarray(r[2], jnp.int32) for r in rows])
+    ths = jnp.stack([jnp.asarray(r[3], jnp.float32) for r in rows])
+    return L, R, ops_, ths
+
+
+def _validity_rows(l_valid, r_valid, m, b):
+    return [
+        (l_valid.astype(jnp.float32), jnp.ones((b,), jnp.float32), _GT, 0.5),
+        (jnp.ones((m,), jnp.float32), r_valid.astype(jnp.float32), _LT, 0.5),
+    ]
+
+
+def _window_rows(l_min, l_max, r_min, r_max, window):
+    # span(L ∪ R) <= W  ⇔  maxL < minR + W  ∧  minL > maxR − W.
+    return [
+        (l_max, r_min, _LT, float(window)),
+        (l_min, r_max, _GT, float(window)),
+    ]
+
+
+def _pred_rows(spec, L: MatchSet, R: MatchSet):
+    """Two orientation rows per static predicate pair, masked by membership."""
+    rows = []
+    for (p, q) in spec.pred_pairs:
+        for (a, b_) in ((p, q), (q, p)):
+            active = L.member[a] & R.member[b_]
+            op = jnp.where(active, spec.op_t[a, b_], _NONE)
+            lv = L.attr[:, a, spec.a_attr_t[a, b_]]
+            rv = R.attr[:, b_, spec.b_attr_t[a, b_]]
+            rows.append((lv, rv, op, spec.theta_t[a, b_]))
+    return rows
+
+
+def _join(spec, cfg, L: MatchSet, R: MatchSet, order_rows, out_cap: int):
+    """One plan step: constraint cross-join + compaction."""
+    m = L.valid.shape[0]
+    b = R.valid.shape[0]
+    rows = (
+        _validity_rows(L.valid, R.valid, m, b)
+        + _window_rows(L.min_ts, L.max_ts, R.min_ts, R.max_ts, spec.window)
+        + order_rows
+        + _pred_rows(spec, L, R)
+    )
+    Ls, Rs, ops_, ths = _rows_to_stacks(rows, m, b)
+    ok = kops.window_join(Ls, Rs, ops_, ths, backend=cfg.backend)
+    pm_created = ok.sum().astype(jnp.int32)
+
+    flat = ok.reshape(-1)
+    idx = jnp.nonzero(flat, size=out_cap, fill_value=m * b)[0]
+    new_valid = jnp.take(flat, idx, mode="fill", fill_value=False)
+    mi = jnp.clip(idx // b, 0, m - 1)
+    bi = jnp.clip(idx % b, 0, b - 1)
+
+    memL = L.member[None, :]
+    ts = jnp.where(memL, L.ts[mi], R.ts[bi])
+    attr = jnp.where(memL[:, :, None], L.attr[mi], R.attr[bi])
+    out = MatchSet(
+        ts=ts,
+        attr=attr,
+        min_ts=jnp.minimum(L.min_ts[mi], R.min_ts[bi]),
+        max_ts=jnp.maximum(L.max_ts[mi], R.max_ts[bi]),
+        valid=new_valid,
+        member=L.member | R.member,
+    )
+    overflow = jnp.maximum(0, pm_created - out_cap).astype(jnp.int32)
+    return out, pm_created, overflow
+
+
+def _any_match(spec, cfg, L: MatchSet, rows, m, b):
+    """Row-wise 'exists compatible event' (negation veto / Kleene count)."""
+    Ls, Rs, ops_, ths = _rows_to_stacks(rows, m, b)
+    ok = kops.window_join(Ls, Rs, ops_, ths, backend=cfg.backend)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Spec: static pattern-derived data shared by both engines
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Spec:
+    n: int
+    n_attrs: int
+    window: float
+    is_seq: bool
+    pred_pairs: Tuple[Tuple[int, int], ...]
+    op_t: np.ndarray
+    a_attr_t: np.ndarray
+    b_attr_t: np.ndarray
+    theta_t: np.ndarray
+    kleene_pos: Optional[int]
+    has_neg: bool
+    negated_pos: Optional[int]
+    # negated-predicate rows: (match_pos, op, match_attr, neg_attr, theta)
+    neg_rows: Tuple[Tuple[int, int, int, int, float], ...]
+    type_ids: Tuple[int, ...]
+    negated_type: Optional[int]
+
+
+def make_spec(pattern: Pattern) -> _Spec:
+    t = pattern.pred_tensors()
+    mirror = {PRED_NONE: PRED_NONE, PRED_LT: PRED_GT, PRED_GT: PRED_LT, 3: 3}
+    neg_rows = []
+    if pattern.negated_type is not None:
+        pos_of = {tid: p for p, tid in enumerate(pattern.type_ids)}
+        for pr in pattern.negated_predicates:
+            if pr.a_type == pattern.negated_type:
+                # cmp(neg, match) -> mirror so the match side is L.
+                neg_rows.append((pos_of[pr.b_type], mirror[pr.op],
+                                 pr.b_attr, pr.a_attr, pr.theta))
+            else:
+                neg_rows.append((pos_of[pr.a_type], pr.op,
+                                 pr.a_attr, pr.b_attr, pr.theta))
+    return _Spec(
+        n=pattern.n,
+        n_attrs=pattern.n_attrs,
+        window=pattern.window,
+        is_seq=pattern.is_sequence,
+        pred_pairs=pattern.selectivity_pairs(),
+        op_t=t["op"],
+        a_attr_t=t["a_attr"],
+        b_attr_t=t["b_attr"],
+        theta_t=t["theta"],
+        kleene_pos=pattern.kleene_pos,
+        has_neg=pattern.negated_type is not None,
+        negated_pos=pattern.negated_pos,
+        neg_rows=tuple(neg_rows),
+        type_ids=pattern.type_ids,
+        negated_type=pattern.negated_type,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Buffers
+# ---------------------------------------------------------------------------
+
+
+def init_buffers(spec: _Spec, cfg: EngineConfig) -> Buffers:
+    t = spec.n + (1 if spec.has_neg else 0)
+    b, a = cfg.b_cap, spec.n_attrs
+    return Buffers(
+        ts=jnp.zeros((t, b), jnp.float32),
+        attr=jnp.zeros((t, b, a), jnp.float32),
+        valid=jnp.zeros((t, b), bool),
+        ptr=jnp.zeros((t,), jnp.int32),
+    )
+
+
+def _ingest(spec: _Spec, cfg: EngineConfig, buffers: Buffers,
+            chunk: Chunk) -> Buffers:
+    """Route chunk events into their per-type ring buffers."""
+    bcap = cfg.b_cap
+    gids = list(spec.type_ids)
+    if spec.has_neg:
+        gids.append(spec.negated_type)
+    ts, attr, valid, ptr = buffers
+    for row, gid in enumerate(gids):  # static loop, n+1 rows max
+        mask = (chunk.type_id == gid) & chunk.valid
+        k = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        slot = jnp.where(mask, (ptr[row] + k) % bcap, bcap)  # bcap -> drop
+        ts = ts.at[row, slot].set(chunk.ts, mode="drop")
+        attr = attr.at[row, slot].set(chunk.attr, mode="drop")
+        valid = valid.at[row, slot].set(True, mode="drop")
+        ptr = ptr.at[row].add(mask.sum().astype(jnp.int32))
+    return Buffers(ts, attr, valid, ptr)
+
+
+def _leaf(spec: _Spec, cfg: EngineConfig, buffers: Buffers, row, pos,
+          t0, out_rows: int) -> MatchSet:
+    """View one buffer row as a single-position match set (padded).
+
+    Eviction threshold is ``t0 - W``: a match completed in (t0, t1] may
+    reference events up to one window older than the chunk start.
+    """
+    n, a, b = spec.n, spec.n_attrs, cfg.b_cap
+    ts_b = buffers.ts[row]                       # (B,)
+    attr_b = buffers.attr[row]                   # (B, A)
+    valid = buffers.valid[row] & (ts_b > t0 - spec.window)
+    onehot = (jnp.arange(n) == pos)              # (n,) bool
+    ts = jnp.where(onehot[None, :], ts_b[:, None], 0.0)
+    attr = jnp.where(onehot[None, :, None], attr_b[:, None, :], 0.0)
+    ms = MatchSet(ts, attr, ts_b, ts_b, valid, onehot)
+    if out_rows != b:
+        pad = out_rows - b
+        ms = MatchSet(
+            ts=jnp.pad(ms.ts, ((0, pad), (0, 0))),
+            attr=jnp.pad(ms.attr, ((0, pad), (0, 0), (0, 0))),
+            min_ts=jnp.pad(ms.min_ts, (0, pad)),
+            max_ts=jnp.pad(ms.max_ts, (0, pad)),
+            valid=jnp.pad(ms.valid, (0, pad)),
+            member=ms.member,
+        )
+    return ms
+
+
+# ---------------------------------------------------------------------------
+# Post-processing: completion filter, negation, Kleene
+# ---------------------------------------------------------------------------
+
+
+def _finalize(spec: _Spec, cfg: EngineConfig, buffers: Buffers,
+              pm: MatchSet, t0, t1, born_lo,
+              born_hi) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Count full matches completed in (t0, t1]; apply negation and Kleene.
+
+    ``born_lo <= min_ts < born_hi`` implements the [36] plan-migration
+    split: during a migration window the old plan is responsible for
+    matches containing at least one pre-replan event (min_ts < t_replan)
+    and the new plan for matches born entirely after it — disjoint sets,
+    so no match is detected twice (§2.2).
+    """
+    n = spec.n
+    m = pm.valid.shape[0]
+    b = cfg.b_cap
+    completed = (pm.valid & (pm.max_ts > t0) & (pm.max_ts <= t1)
+                 & (pm.min_ts >= born_lo) & (pm.min_ts < born_hi))
+    neg_rejected = jnp.int32(0)
+
+    if spec.has_neg:
+        row = n  # negated buffer row
+        nts = buffers.ts[row]
+        nvalid = buffers.valid[row] & (nts > t0 - spec.window)
+        rows = _validity_rows(completed, nvalid, m, b)
+        rows += _window_rows(pm.min_ts, pm.max_ts, nts, nts, spec.window)
+        np_ = spec.negated_pos
+        if np_ is not None and np_ > 0:
+            rows.append((pm.ts[:, np_ - 1], nts, _LT, 0.0))
+        if np_ is not None and np_ < n:
+            rows.append((pm.ts[:, np_], nts, _GT, 0.0))
+        for (pos, op, ma, na, th) in spec.neg_rows:
+            rows.append((pm.attr[:, pos, ma], buffers.attr[row][:, na],
+                         op, th))
+        ok = _any_match(spec, cfg, pm, rows, m, b)
+        veto = ok.any(axis=1)
+        neg_rejected = (completed & veto).sum().astype(jnp.int32)
+        completed = completed & ~veto
+
+    closure = jnp.int32(0)
+    if spec.kleene_pos is not None:
+        kp = spec.kleene_pos
+        kts = buffers.ts[kp]
+        kvalid = buffers.valid[kp] & (kts > t0 - spec.window)
+        rows = _validity_rows(completed, kvalid, m, b)
+        rows += _window_rows(pm.min_ts, pm.max_ts, kts, kts, spec.window)
+        if spec.is_seq and kp > 0:
+            rows.append((pm.ts[:, kp - 1], kts, _LT, 0.0))
+        if spec.is_seq and kp < n - 1:
+            rows.append((pm.ts[:, kp + 1], kts, _GT, 0.0))
+        for (p, q) in spec.pred_pairs:
+            if q == kp:
+                rows.append((pm.attr[:, p, spec.a_attr_t[p, kp]],
+                             buffers.attr[kp][:, spec.b_attr_t[p, kp]],
+                             spec.op_t[p, kp], spec.theta_t[p, kp]))
+            elif p == kp:
+                rows.append((pm.attr[:, q, spec.a_attr_t[q, kp]],
+                             buffers.attr[kp][:, spec.b_attr_t[q, kp]],
+                             spec.op_t[q, kp], spec.theta_t[q, kp]))
+        ok = _any_match(spec, cfg, pm, rows, m, b)
+        comp = jnp.maximum(ok.sum(axis=1) - 1, 0)  # exclude the match's own
+        closure = jnp.where(completed, comp, 0).sum().astype(jnp.int32)
+
+    return completed.sum().astype(jnp.int32), neg_rejected, closure
+
+
+# ---------------------------------------------------------------------------
+# Order-based engine (lazy-NFA style)
+# ---------------------------------------------------------------------------
+
+
+class OrderEngine:
+    """Executes order-based plans; the order vector is a dynamic argument."""
+
+    def __init__(self, pattern: Pattern, cfg: EngineConfig = EngineConfig()):
+        self.pattern = pattern
+        self.spec = make_spec(pattern)
+        self.cfg = cfg
+        self._process = jax.jit(self._make_process())
+
+    def init_state(self) -> Buffers:
+        return init_buffers(self.spec, self.cfg)
+
+    def _make_process(self):
+        spec, cfg = self.spec, self.cfg
+        n = spec.n
+
+        def order_rows(pm: MatchSet, q, R: MatchSet):
+            if not spec.is_seq:
+                return []
+            pos = jnp.arange(n)
+            lo_cand = jnp.where(pm.member & (pos < q), pos, -1)
+            p_lo = lo_cand.max()
+            hi_cand = jnp.where(pm.member & (pos > q), pos, n)
+            p_hi = hi_cand.min()
+            lv_lo = pm.ts[:, jnp.clip(p_lo, 0, n - 1)]
+            lv_hi = pm.ts[:, jnp.clip(p_hi, 0, n - 1)]
+            op_lo = jnp.where(p_lo >= 0, _LT, _NONE)
+            op_hi = jnp.where(p_hi < n, _GT, _NONE)
+            return [
+                (lv_lo, R.min_ts, op_lo, 0.0),
+                (lv_hi, R.min_ts, op_hi, 0.0),
+            ]
+
+        def process(buffers: Buffers, chunk: Chunk, order, t0, t1,
+                    born_lo, born_hi):
+            buffers = _ingest(spec, cfg, buffers, chunk)
+            pm = _leaf(spec, cfg, buffers, order[0], order[0], t0, cfg.m_cap)
+            pm_total = pm.valid.sum().astype(jnp.int32)
+            overflow = jnp.int32(0)
+            for i in range(1, n):  # static loop over plan steps
+                q = order[i]
+                R = _leaf(spec, cfg, buffers, q, q, t0, cfg.b_cap)
+                rows = order_rows(pm, q, R)
+                pm, created, ov = _join(spec, cfg, pm, R, rows, cfg.m_cap)
+                pm_total = pm_total + created
+                overflow = overflow + ov
+            full, neg_rej, closure = _finalize(
+                spec, cfg, buffers, pm, t0, t1, born_lo, born_hi)
+            return buffers, StepResult(full, pm_total, overflow, closure,
+                                       neg_rej)
+
+        return process
+
+    def process_chunk(self, buffers: Buffers, chunk: Chunk, plan: OrderPlan,
+                      t0: float, t1: float,
+                      born_lo: float = -3.0e38, born_hi: float = 3.0e38):
+        order = jnp.asarray(plan.order, jnp.int32)
+        return self._process(buffers, chunk, order,
+                             jnp.float32(t0), jnp.float32(t1),
+                             jnp.float32(born_lo), jnp.float32(born_hi))
+
+
+# ---------------------------------------------------------------------------
+# Tree-based engine (ZStream style)
+# ---------------------------------------------------------------------------
+
+
+def tree_plan_to_slots(plan: TreePlan) -> np.ndarray:
+    """Convert a TreePlan into an (n-1, 2) slot-join program.
+
+    Slots 0..n-1 are the leaves (pattern positions); slot n+s is the result
+    of join step s.  The interval DP guarantees every node's left child
+    covers the earlier contiguous interval, which the tree engine's single
+    cross-order constraint relies on for sequence patterns.
+    """
+    n = plan.n
+    slot_of = {}
+    steps = []
+
+    def walk(node: TreeNode) -> int:
+        if node.is_leaf:
+            return node.leaf
+        li = walk(node.left)
+        ri = walk(node.right)
+        # Contiguity + ordering sanity (host-side).
+        ll, rl = node.left.leaves(), node.right.leaves()
+        leaves = sorted(ll + rl)
+        assert leaves == list(range(leaves[0], leaves[-1] + 1)), (
+            "tree engine requires contiguous-interval plans")
+        assert max(ll) < min(rl), "left child must cover earlier interval"
+        sid = n + len(steps)
+        steps.append((li, ri))
+        return sid
+
+    walk(plan.root)
+    return np.asarray(steps, np.int32)
+
+
+class TreeEngine:
+    """Executes tree-based plans; the slot program is a dynamic argument."""
+
+    def __init__(self, pattern: Pattern, cfg: EngineConfig = EngineConfig()):
+        self.pattern = pattern
+        self.spec = make_spec(pattern)
+        self.cfg = cfg
+        self._process = jax.jit(self._make_process())
+
+    def init_state(self) -> Buffers:
+        return init_buffers(self.spec, self.cfg)
+
+    def _make_process(self):
+        spec, cfg = self.spec, self.cfg
+        n = spec.n
+        m = cfg.m_cap
+
+        def process(buffers: Buffers, chunk: Chunk, steps, t0, t1,
+                    born_lo, born_hi):
+            buffers = _ingest(spec, cfg, buffers, chunk)
+            # Stacked slots: leaves first, then one per join step.
+            leaves = [
+                _leaf(spec, cfg, buffers, p, p, t0, m) for p in range(n)
+            ]
+            empty = MatchSet(
+                ts=jnp.zeros((m, n), jnp.float32),
+                attr=jnp.zeros((m, n, spec.n_attrs), jnp.float32),
+                min_ts=jnp.zeros((m,), jnp.float32),
+                max_ts=jnp.zeros((m,), jnp.float32),
+                valid=jnp.zeros((m,), bool),
+                member=jnp.zeros((n,), bool),
+            )
+            slots = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *(leaves + [empty] * (n - 1)),
+            )
+            # Leaf cardinalities count as materialized state (ZStream cost).
+            pm_total = sum(
+                l.valid.sum() for l in leaves).astype(jnp.int32)
+            overflow = jnp.int32(0)
+            pm = leaves[0]
+            for s in range(n - 1):  # static loop; slot gathers are dynamic
+                L = jax.tree.map(lambda x: x[steps[s, 0]], slots)
+                R = jax.tree.map(lambda x: x[steps[s, 1]], slots)
+                rows = []
+                if spec.is_seq:
+                    rows.append((L.max_ts, R.min_ts, _LT, 0.0))
+                pm, created, ov = _join(spec, cfg, L, R, rows, m)
+                pm_total = pm_total + created
+                overflow = overflow + ov
+                slots = jax.tree.map(
+                    lambda full, new: full.at[n + s].set(new), slots, pm)
+            full, neg_rej, closure = _finalize(
+                spec, cfg, buffers, pm, t0, t1, born_lo, born_hi)
+            return buffers, StepResult(full, pm_total, overflow, closure,
+                                       neg_rej)
+
+        return process
+
+    def process_chunk(self, buffers: Buffers, chunk: Chunk, plan: TreePlan,
+                      t0: float, t1: float,
+                      born_lo: float = -3.0e38, born_hi: float = 3.0e38):
+        steps = jnp.asarray(tree_plan_to_slots(plan), jnp.int32)
+        return self._process(buffers, chunk, steps,
+                             jnp.float32(t0), jnp.float32(t1),
+                             jnp.float32(born_lo), jnp.float32(born_hi))
+
+
+def make_engine(kind: str, pattern: Pattern,
+                cfg: EngineConfig = EngineConfig()):
+    if kind == "order":
+        return OrderEngine(pattern, cfg)
+    if kind == "tree":
+        return TreeEngine(pattern, cfg)
+    raise ValueError(f"unknown engine kind {kind!r}")

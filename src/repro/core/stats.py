@@ -1,0 +1,163 @@
+"""Sliding-window statistics estimation (paper §2.2, refs [14, 27]).
+
+The monitored set ``Stat`` consists of per-type event arrival rates and
+pairwise predicate selectivities.  We maintain both over a sliding window of
+recent stream history using a ring of time buckets — a simplified (exact
+count, bounded memory) variant of the exponential-histogram techniques of
+Datar et al. [27]: the engine processes chunks, each chunk contributes one
+bucket of per-type counts and per-pair (trials, successes) selectivity
+samples, and the estimate is the aggregate over the last ``num_buckets``
+buckets.  This costs O(n + n²) memory and O(1) amortized update time, which
+matches the paper's "negligible system resources" requirement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Stat:
+    """A snapshot of the monitored statistic values.
+
+    rates: (n,) arrival rate per pattern position [events / time unit].
+    sel:   (n, n) predicate selectivity per position pair; 1.0 where no
+           predicate is defined (paper §4.1).  ``sel[i, i]`` holds the
+           selectivity of conditions defined solely on type i.
+    """
+
+    rates: np.ndarray
+    sel: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.rates.shape[0])
+
+    def values(self) -> np.ndarray:
+        """Flat view of all monitored values (for threshold policies)."""
+        iu = np.triu_indices(self.n)
+        return np.concatenate([self.rates, self.sel[iu]])
+
+    def copy(self) -> "Stat":
+        return Stat(self.rates.copy(), self.sel.copy())
+
+
+def uniform_stat(n: int, rate: float = 1.0, sel: float = 1.0) -> Stat:
+    s = np.full((n, n), sel, np.float64)
+    return Stat(np.full((n,), rate, np.float64), s)
+
+
+class SlidingWindowEstimator:
+    """Windowed arrival-rate + selectivity estimator.
+
+    Parameters
+    ----------
+    n: number of pattern positions (event types) monitored.
+    num_buckets: sliding-window length in chunks.
+    laplace: additive smoothing for selectivity (avoids 0/0 on cold pairs).
+    """
+
+    def __init__(self, n: int, num_buckets: int = 16, laplace: float = 1.0):
+        self.n = n
+        self.num_buckets = num_buckets
+        self.laplace = float(laplace)
+        self._counts = np.zeros((num_buckets, n), np.float64)
+        self._durations = np.zeros((num_buckets,), np.float64)
+        self._sel_trials = np.zeros((num_buckets, n, n), np.float64)
+        self._sel_hits = np.zeros((num_buckets, n, n), np.float64)
+        self._head = 0
+        self._filled = 0
+
+    def update(
+        self,
+        counts: np.ndarray,
+        duration: float,
+        sel_trials: Optional[np.ndarray] = None,
+        sel_hits: Optional[np.ndarray] = None,
+    ) -> None:
+        """Push one chunk worth of observations into the window."""
+        h = self._head
+        self._counts[h] = counts
+        self._durations[h] = max(float(duration), 1e-9)
+        self._sel_trials[h] = 0.0 if sel_trials is None else sel_trials
+        self._sel_hits[h] = 0.0 if sel_hits is None else sel_hits
+        self._head = (h + 1) % self.num_buckets
+        self._filled = min(self._filled + 1, self.num_buckets)
+
+    def snapshot(self) -> Stat:
+        k = max(self._filled, 1)
+        total_t = self._durations[:k].sum() if self._filled else 1.0
+        # Use the whole ring; un-filled buckets are zero and do not bias sums.
+        rates = self._counts.sum(axis=0) / max(total_t, 1e-9)
+        trials = self._sel_trials.sum(axis=0)
+        hits = self._sel_hits.sum(axis=0)
+        lp = self.laplace
+        sel = (hits + lp) / (trials + 2.0 * lp)
+        # Pairs with no predicate ever sampled: selectivity 1 (paper §4.1).
+        sel = np.where(trials > 0, sel, 1.0)
+        return Stat(rates, sel)
+
+    @property
+    def ready(self) -> bool:
+        return self._filled > 0
+
+
+def sample_selectivities(
+    rng: np.random.Generator,
+    type_id: np.ndarray,
+    attrs: np.ndarray,
+    pred_tensors: dict,
+    pos_of_type: dict,
+    n: int,
+    samples_per_pair: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Monte-Carlo selectivity sampling over one chunk (host-side, cheap).
+
+    For every pattern-position pair (p, q) carrying a real predicate, draw up
+    to ``samples_per_pair`` random event pairs of the corresponding types from
+    the chunk and evaluate the predicate.  Returns (trials, hits) matrices of
+    shape (n, n) — symmetric, filled on the upper triangle and mirrored.
+
+    The planner needs selectivities for *all* predicate pairs, including ones
+    the currently deployed plan never joins, so passive estimates from the
+    live join matrices are not enough (paper §2.2 keeps estimation
+    plan-independent for the same reason).
+    """
+    from .patterns import PRED_NONE, PRED_LT, PRED_GT, PRED_ABS_LE
+
+    op = pred_tensors["op"]
+    a_attr = pred_tensors["a_attr"]
+    b_attr = pred_tensors["b_attr"]
+    theta = pred_tensors["theta"]
+    trials = np.zeros((n, n), np.float64)
+    hits = np.zeros((n, n), np.float64)
+
+    idx_by_pos = {}
+    for t, p in pos_of_type.items():
+        idx_by_pos[p] = np.nonzero(type_id == t)[0]
+
+    for p in range(n):
+        for q in range(p + 1, n):
+            if op[p, q] == PRED_NONE:
+                continue
+            ip, iq = idx_by_pos.get(p), idx_by_pos.get(q)
+            if ip is None or iq is None or len(ip) == 0 or len(iq) == 0:
+                continue
+            m = samples_per_pair
+            sa = attrs[rng.choice(ip, m), a_attr[p, q]]
+            sb = attrs[rng.choice(iq, m), b_attr[p, q]]
+            o, th = int(op[p, q]), float(theta[p, q])
+            if o == PRED_LT:
+                ok = sa < sb + th
+            elif o == PRED_GT:
+                ok = sa > sb - th
+            elif o == PRED_ABS_LE:
+                ok = np.abs(sa - sb) <= th
+            else:  # pragma: no cover - PRED_NONE filtered above
+                ok = np.ones(m, bool)
+            trials[p, q] = trials[q, p] = m
+            hits[p, q] = hits[q, p] = float(ok.sum())
+    return trials, hits

@@ -1,0 +1,1 @@
+"""Data pipelines: CEP stream generators and synthetic LM token data."""

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding rules, mesh helpers,
+gradient compression collectives."""
+
+from .sharding import (  # noqa: F401
+    MeshRules,
+    current_rules,
+    logical_constraint,
+    logical_sharding,
+    set_rules,
+    use_rules,
+)

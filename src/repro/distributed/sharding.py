@@ -1,0 +1,165 @@
+"""Logical-axis sharding with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", "experts", …).  A ``MeshRules`` table maps logical names to physical
+mesh axes; resolution checks divisibility and **falls back to replication**
+on any axis that does not divide evenly (e.g. paligemma's 8 query heads or
+its single KV head on a 16-way model axis).  Fallbacks are recorded so the
+dry-run can report them per cell.
+
+The default rule set implements the production layout of DESIGN.md §5:
+
+* ``batch``    → ("pod", "data")   — data parallelism across pods and rows;
+* ``embed``    → "data"            — FSDP: parameters' d_model dim sharded
+                                      over the data axis (gathered per layer);
+* ``heads`` / ``kv_heads`` / ``ff`` / ``experts`` / ``vocab`` → "model"
+                                   — tensor/expert parallelism;
+* ``seq``      → None              — sequence kept unsharded by default
+                                      (sequence parallelism is opt-in via
+                                      ``seq → "model"`` in §Perf experiments);
+* activation ``act_embed`` → None  — activations replicated over model axis
+                                      after collectives.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "embed": "data",        # FSDP shard of parameter d_model dims
+    "opt_embed": "data",    # ZeRO-1: optimizer-state d_model dims
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "cache_seq": "model",   # decode KV caches: split-T (flash-decoding)
+    "layers": None,
+    "conv": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "frontend": None,
+}
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Optional[Mesh]
+    rules: Dict[str, AxisVal]
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+
+    def axis_size(self, phys: AxisVal) -> int:
+        if phys is None or self.mesh is None:
+            return 1
+        if isinstance(phys, str):
+            phys = (phys,)
+        size = 1
+        for a in phys:
+            size *= self.mesh.shape.get(a, 1)
+        return size
+
+    def resolve(self, shape: Sequence[int],
+                logical: Sequence[Optional[str]],
+                tag: str = "") -> PartitionSpec:
+        """Logical names -> PartitionSpec with divisibility fallback."""
+        assert len(shape) == len(logical), (shape, logical, tag)
+        out = []
+        used: set = set()
+        for dim, name in zip(shape, logical):
+            if name is None:
+                out.append(None)
+                continue
+            phys = self.rules.get(name)
+            if phys is None:
+                out.append(None)
+                continue
+            phys_t = (phys,) if isinstance(phys, str) else tuple(phys)
+            # Drop mesh axes missing from the current mesh (e.g. "pod" on
+            # the single-pod mesh) and axes already used by an earlier dim
+            # of this tensor (a mesh axis may appear only once per spec —
+            # e.g. MoE expert weights (E, D, F) map experts->model and must
+            # then leave ff unsharded).
+            dropped_dup = [a for a in phys_t
+                           if self.mesh is not None
+                           and a in self.mesh.shape and a in used]
+            phys_t = tuple(a for a in phys_t
+                           if (self.mesh is None or a in self.mesh.shape)
+                           and a not in used)
+            if dropped_dup:
+                self.fallbacks.append(
+                    f"{tag}: dim {dim} ({name}) axis {dropped_dup} already "
+                    "used by an earlier dim -> replicated")
+            size = self.axis_size(phys_t)
+            if size <= 1:
+                out.append(None)
+            elif dim % size == 0:
+                used.update(phys_t)
+                out.append(phys_t[0] if len(phys_t) == 1 else phys_t)
+            else:
+                self.fallbacks.append(
+                    f"{tag}: dim {dim} ({name}) not divisible by "
+                    f"{phys_t} ({size}) -> replicated")
+                out.append(None)
+        return PartitionSpec(*out)
+
+    def sharding(self, shape, logical, tag: str = "") -> NamedSharding:
+        assert self.mesh is not None, "sharding requires an active mesh"
+        return NamedSharding(self.mesh, self.resolve(shape, logical, tag))
+
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_local, "rules", None)
+
+
+def set_rules(rules: Optional[MeshRules]) -> None:
+    _local.rules = rules
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh],
+              overrides: Optional[Dict[str, AxisVal]] = None):
+    """Activate a mesh + logical-rule table for model tracing."""
+    table = dict(DEFAULT_RULES)
+    if overrides:
+        table.update(overrides)
+    prev = current_rules()
+    set_rules(MeshRules(mesh=mesh, rules=table))
+    try:
+        yield current_rules()
+    finally:
+        set_rules(prev)
+
+
+def logical_constraint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.resolve(x.shape, logical, tag="activation")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, spec))
+
+
+def logical_sharding(shape, logical, tag: str = "") -> Optional[NamedSharding]:
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return None
+    return r.sharding(shape, logical, tag)

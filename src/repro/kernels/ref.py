@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the ``window_join`` kernel.
+
+Semantics (shared with the Pallas kernel): given ``C`` constraint rows,
+left-side values ``L[c, m]``, right-side values ``R[c, b]``, per-row op-codes
+and thresholds, compute
+
+    ok[m, b] = AND_c  cmp(op[c], L[c, m], R[c, b], theta[c])
+
+with the op-code table of ``repro.core.patterns``:
+
+    0 (NONE)   -> True
+    1 (LT)     -> l <  r + theta
+    2 (GT)     -> l >  r - theta
+    3 (ABS_LE) -> |l - r| <= theta
+
+This single masked cross-comparison evaluates every constraint class of the
+CEP engine — time-window membership, sequence ordering, pairwise predicates
+and validity masks (encoded as 0/1 rows) — which is what makes the data
+plane a dense, TPU-tileable operation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cmp_op(op, l, r, theta):
+    """Elementwise comparison dispatch; broadcasts ``l`` vs ``r``."""
+    lt = l < r + theta
+    gt = l > r - theta
+    ab = jnp.abs(l - r) <= theta
+    true = jnp.ones_like(lt)
+    return jnp.where(
+        op == 1, lt, jnp.where(op == 2, gt, jnp.where(op == 3, ab, true))
+    )
+
+
+def window_join_ref(L, R, ops, thetas):
+    """ok[m, b] = AND over constraint rows.  L: (C, M), R: (C, B)."""
+    l = L[:, :, None]              # (C, M, 1)
+    r = R[:, None, :]              # (C, 1, B)
+    op = ops[:, None, None]
+    th = thetas[:, None, None]
+    return jnp.all(cmp_op(op, l, r, th), axis=0)

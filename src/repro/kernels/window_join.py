@@ -1,0 +1,176 @@
+"""Pallas TPU kernel for the CEP masked windowed cross-join.
+
+The hot loop of the vectorized CEP engine is, per evaluation-plan step, a
+dense cross-evaluation of ``C`` constraint rows between ``M`` partial matches
+and ``B`` buffered events:
+
+    ok[m, b] = AND_c cmp(op[c], L[c, m], R[c, b], theta[c]).
+
+TPU mapping
+-----------
+* Grid tiles the (M, B) output into ``(block_m, block_b)`` VMEM tiles
+  (default 128×128 — lane-aligned; the op is VPU-bound, 8×128 vregs).
+* The constraint dimension ``C`` is small (≈ 2·n + predicate pairs ≤ ~32);
+  each tile loads the full ``(C, block_m)`` / ``(C, block_b)`` operand strips
+  into VMEM — a few KiB — and unrolls the AND-reduction over ``C``
+  (``C`` is static at trace time; op-codes/thresholds are *data*, so one
+  compiled kernel serves every pattern/plan of a given size — plan changes
+  never recompile the data plane).
+* Output is ``int8`` 0/1 (TPU-safe dense mask); the wrapper casts to bool.
+
+VMEM budget per tile: 2·C·128·4 B (operands) + 128·128 B (mask) ≈ 48 KiB at
+C = 32 — far under the ~16 MiB/core budget, leaving room for the pipeline's
+double buffering.
+
+Validated against ``ref.window_join_ref`` in ``interpret=True`` mode on CPU
+(see ``tests/test_kernels.py``); TPU is the deployment target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(l_ref, r_ref, op_ref, th_ref, out_ref):
+    C = l_ref.shape[0]
+    bm = l_ref.shape[1]
+    bb = r_ref.shape[1]
+    acc = jnp.ones((bm, bb), jnp.bool_)
+    for c in range(C):  # static unroll over the small constraint dim
+        l = l_ref[c, :][:, None]          # (bm, 1)
+        r = r_ref[c, :][None, :]          # (1, bb)
+        op = op_ref[c]
+        th = th_ref[c]
+        lt = l < r + th
+        gt = l > r - th
+        ab = jnp.abs(l - r) <= th
+        ok = jnp.where(
+            op == 1, lt, jnp.where(op == 2, gt, jnp.where(op == 3, ab, True))
+        )
+        acc = jnp.logical_and(acc, ok)
+    out_ref[...] = acc.astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_b", "interpret")
+)
+def window_join_pallas(
+    L: jax.Array,
+    R: jax.Array,
+    ops: jax.Array,
+    thetas: jax.Array,
+    *,
+    block_m: int = 128,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled Pallas evaluation of the constraint cross-join.
+
+    L: (C, M) f32, R: (C, B) f32, ops: (C,) i32, thetas: (C,) f32.
+    Returns ok: (M, B) bool.  M and B are padded up to tile multiples
+    internally; padding garbage is sliced away before returning.
+    """
+    C, M = L.shape
+    _, B = R.shape
+    bm = min(block_m, max(M, 8))
+    bb = min(block_b, max(B, 128))
+    Mp = (M + bm - 1) // bm * bm
+    Bp = (B + bb - 1) // bb * bb
+    if Mp != M:
+        L = jnp.pad(L, ((0, 0), (0, Mp - M)))
+    if Bp != B:
+        R = jnp.pad(R, ((0, 0), (0, Bp - B)))
+
+    grid = (Mp // bm, Bp // bb)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((C, bb), lambda i, j: (0, j)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Bp), jnp.int8),
+        interpret=interpret,
+    )(
+        L.astype(jnp.float32),
+        R.astype(jnp.float32),
+        ops.astype(jnp.int32),
+        thetas.astype(jnp.float32),
+    )
+    return out[:M, :B].astype(jnp.bool_)
+
+
+def _count_kernel(l_ref, r_ref, op_ref, th_ref, out_ref):
+    """Per-tile match counting — avoids materializing ok to HBM when only
+    cardinalities are needed (statistics estimation, §2.2)."""
+    C = l_ref.shape[0]
+    bm = l_ref.shape[1]
+    bb = r_ref.shape[1]
+    acc = jnp.ones((bm, bb), jnp.bool_)
+    for c in range(C):
+        l = l_ref[c, :][:, None]
+        r = r_ref[c, :][None, :]
+        op = op_ref[c]
+        th = th_ref[c]
+        lt = l < r + th
+        gt = l > r - th
+        ab = jnp.abs(l - r) <= th
+        ok = jnp.where(
+            op == 1, lt, jnp.where(op == 2, gt, jnp.where(op == 3, ab, True))
+        )
+        acc = jnp.logical_and(acc, ok)
+    out_ref[0, 0] = jnp.sum(acc.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_b", "interpret")
+)
+def window_join_count_pallas(
+    L, R, ops, thetas, *, block_m: int = 128, block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Total number of matching (m, b) pairs, computed tile-locally."""
+    C, M = L.shape
+    _, B = R.shape
+    bm = min(block_m, max(M, 8))
+    bb = min(block_b, max(B, 128))
+    Mp = (M + bm - 1) // bm * bm
+    Bp = (B + bb - 1) // bb * bb
+    # Pad with an always-false row (op GT with -inf lhs) so padding never
+    # counts: simpler — pad operands with values that fail row 0 if row 0 is
+    # a validity row; engines always put validity rows first, but to stay
+    # generic we pad L with +inf and append... instead mask after: count
+    # per-tile then subtract padded-region counts via a validity row the
+    # caller provides.  We keep it simple and exact: pad with NaN, which
+    # fails every comparison.
+    if Mp != M:
+        L = jnp.pad(L, ((0, 0), (0, Mp - M)), constant_values=jnp.nan)
+    if Bp != B:
+        R = jnp.pad(R, ((0, 0), (0, Bp - B)), constant_values=jnp.nan)
+    grid = (Mp // bm, Bp // bb)
+    counts = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((C, bb), lambda i, j: (0, j)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp // bm, Bp // bb), jnp.int32),
+        interpret=interpret,
+    )(
+        L.astype(jnp.float32),
+        R.astype(jnp.float32),
+        ops.astype(jnp.int32),
+        thetas.astype(jnp.float32),
+    )
+    return counts.sum()

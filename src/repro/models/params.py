@@ -1,0 +1,77 @@
+"""Parameter definition machinery — one source of truth per architecture.
+
+Each model family provides a nested dict of ``ParamDef``s (shape, logical
+axes, initializer).  From that single structure we derive:
+
+* materialized parameters (``init_params``),
+* logical-axis trees (``logical_axes``) for pjit in/out shardings,
+* abstract ``ShapeDtypeStruct`` trees for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: Optional[float] = None   # None -> 1/sqrt(fan_in) with fan_in =
+                                    # last-but-one dim (matmul convention)
+
+    def stacked(self, n: int) -> "ParamDef":
+        return ParamDef((n,) + self.shape, ("layers",) + self.axes,
+                        self.init, self.scale)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(d: ParamDef, key, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        scale = d.scale
+        if scale is None:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * scale).astype(dtype)
+    raise ValueError(d.init)
+
+
+def init_params(defs, key, dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_axes(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def abstract_params(defs, dtype):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def param_bytes(defs, dtype) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) * itemsize for d in leaves)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)

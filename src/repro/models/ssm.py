@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+The SSD layer computes, per head ``h`` with scalar decay ``A_h < 0``:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t (B_t ⊗ x_t),      y_t = C_t · h_t + D x_t
+
+Training/prefill uses the paper's **chunked matmul form** (Listing 1): the
+sequence splits into chunks of length ``Q``; intra-chunk terms are a masked
+``C Bᵀ`` product (MXU-friendly ``Q×Q`` matmuls), inter-chunk terms flow
+through a tiny recurrence over per-chunk states — ``O(S·Q)`` work with all
+FLOPs in matmuls, the TPU-native reformulation of Mamba's CUDA scan.
+
+Decode maintains (conv_state, ssd_state) and costs O(1) per token — which is
+why the SSM/hybrid architectures are the ones assigned the ``long_500k``
+shape.
+
+Layout: x/B/C pass through a short causal depthwise conv (width
+``ssm_conv``); gating ``z`` and the dt head come straight from the input
+projection; output is ``out_proj(rms_norm(y) * silu(z))``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical_constraint as lc
+from .config import ModelConfig
+from .layers import rms_norm
+from .params import ParamDef
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, conv_w - 1, conv_ch) rolling conv inputs
+    ssd: jax.Array   # (B, H, P, N) recurrent state
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": ParamDef((d, 2 * di + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_ch), ("conv", "ssm_inner"),
+                           scale=0.5),
+        "A_log": ParamDef((h,), ("ssm_heads",), "zeros"),
+        "D": ParamDef((h,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), "zeros"),
+        "norm_w": ParamDef((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w):
+    """Depthwise causal conv over time.  xBC: (B,S,CH), w: (W,CH)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):  # small static unroll (W = 4)
+        out = out + pad[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def _segsum(a):
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} a[..., k].
+
+    Lower-triangular; -inf above the diagonal.  a: (..., L).
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: int = 1):
+    """Chunked SSD scan, streamed over chunks.
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, n) (single group, broadcast over heads).
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+
+    One ``lax.scan`` over the ``s/chunk`` chunks carries the recurrent
+    state; per-step live memory is the chunk-local decay mask
+    ``(b, h, q, q)`` — a naively materialized all-chunks mask
+    ``(b, h, nc, q, q)`` would be terabytes at 32k prefill.  All heavy
+    FLOPs are q×q / q×n matmuls (MXU-shaped).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xd = x * dt[..., None]                                  # dt-weighted
+    a = dt * A[None, None, :]                               # (b, s, h) <= 0
+    # Chunked, scan-major layouts.
+    xc = xd.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    Bc = B.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    ac = a.reshape(b, nc, q, h).transpose(1, 0, 3, 2)       # (nc,b,h,q)
+
+    def step(h_state, inp):
+        x_c, B_c, C_c, a_c = inp                            # chunk-local
+        a_cum = jnp.cumsum(a_c, axis=-1)                    # (b,h,q)
+        Lm = jnp.exp(_segsum(a_c))                          # (b,h,q,q)
+        scores = jnp.einsum("bln,bsn->bls", C_c, B_c)       # (b,q,q)
+        y_diag = jnp.einsum("bhls,bls,bshp->blhp",
+                            Lm, scores, x_c)
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)     # (b,h,q)
+        contrib = jnp.einsum("bln,bhl,blhp->bhpn",
+                             B_c, decay_states, x_c)
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp",
+                           C_c, h_state, jnp.exp(a_cum))
+        h_new = (h_state * jnp.exp(a_cum[..., -1])[..., None, None]
+                 + contrib)
+        return h_new, y_diag + y_off
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, ys = jax.lax.scan(step, init, (xc, Bc, Cc, ac),
+                             unroll=min(unroll, nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_block(x, p, cfg: ModelConfig, state: SSMState | None = None
+              ) -> Tuple[jax.Array, SSMState]:
+    """One Mamba2 block.  x: (B, S, D).
+
+    With ``state`` and S == 1: O(1) recurrent decode step.
+    Without: chunked scan over the sequence (train / prefill); the returned
+    state allows seamless continuation into decode.
+    """
+    bsz, S, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    proj = lc(proj, "batch", "seq", "ssm_inner")
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (h,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    w = p["conv_w"].astype(x.dtype)
+    W = cfg.ssm_conv
+
+    if state is not None and S == 1:
+        # ---- decode ----
+        window = jnp.concatenate([state.conv, xBC], axis=1)  # (B, W, CH)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", window, w))[:, None, :]  # (B,1,CH)
+        new_conv = window[:, 1:, :]
+        xs = conv_out[..., :di].reshape(bsz, 1, h, pdim)
+        Bv = conv_out[..., di:di + n][:, 0]                  # (B, n)
+        Cv = conv_out[..., di + n:][:, 0]                    # (B, n)
+        dt1 = dt[:, 0]                                       # (B, h)
+        decay = jnp.exp(dt1 * A[None, :])                    # (B, h)
+        xd = xs[:, 0] * dt1[..., None]                       # (B, h, p)
+        upd = jnp.einsum("bhp,bn->bhpn", xd, Bv)
+        new_ssd = state.ssd * decay[..., None, None].astype(x.dtype) \
+            + upd.astype(x.dtype)
+        y = jnp.einsum("bhpn,bn->bhp", new_ssd, Cv)
+        y = y + xs[:, 0] * p["D"].astype(x.dtype)[None, :, None]
+        y = y.reshape(bsz, 1, di)
+        new_state = SSMState(new_conv, new_ssd)
+    else:
+        # ---- train / prefill ----
+        conv_out = _causal_conv(xBC, w)                      # (B,S,CH)
+        xs = conv_out[..., :di].reshape(bsz, S, h, pdim)
+        Bv = conv_out[..., di:di + n]
+        Cv = conv_out[..., di + n:]
+        y, final = ssd_chunked(
+            xs.astype(jnp.float32), dt, A,
+            Bv.astype(jnp.float32), Cv.astype(jnp.float32),
+            min(cfg.ssm_chunk, S), unroll=cfg.ssm_scan_unroll)
+        y = y + xs.astype(jnp.float32) \
+            * p["D"].astype(jnp.float32)[None, None, :, None]
+        y = y.reshape(bsz, S, di).astype(x.dtype)
+        new_conv = jnp.pad(
+            xBC, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0))
+        )[:, -(W - 1):, :]
+        new_state = SSMState(new_conv, final.astype(x.dtype))
+
+    y = rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return lc(out, "batch", "seq", "act_embed"), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        ssd=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), dtype),
+    )

@@ -1,0 +1,4 @@
+"""Serving substrate: prefill/decode engine + adaptive batch scheduler."""
+
+from .engine import ServingEngine  # noqa: F401
+from .scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode with a unified cache.
+
+Wraps ``Model.prefill`` / ``Model.decode_step`` into jitted entry points
+with a fixed batch capacity.  Requests occupy batch *slots*; finished slots
+are refilled by the scheduler without recompiling (slot state is data).
+Per-request cache write indices support heterogeneous positions in one
+batch — the decode step is one compiled program regardless of the request
+mix, mirroring the CEP engine's plans-are-data design.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import Cache, Model
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int,
+                 cache_len: int):
+        self.cfg = cfg
+        self.model = Model(cfg, remat="none")
+        self.params = params
+        self.batch_slots = batch_slots
+        self.cache_len = cache_len
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill_cache: Dict[int, object] = {}
+        self.cache: Cache = self.model.init_cache(batch_slots, cache_len)
+
+    def prefill_one(self, tokens: np.ndarray, slot: int) -> int:
+        """Prefill a single request's prompt into ``slot``.
+
+        Prompt lengths are bucketed to powers of two so each bucket
+        compiles once (static shapes; the adaptive batch planner keeps the
+        hot buckets warm).  Returns the first generated token.
+        """
+        plen = len(tokens)
+        bucket = 1 << max(4, (plen - 1).bit_length())
+        if self.cfg.family in ("ssm", "hybrid") and bucket != plen:
+            raise ValueError(
+                "SSM-state prefill needs exact-length prompts; generate "
+                f"prompts at bucket sizes (got {plen}, bucket {bucket})")
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = tokens
+        if bucket not in self._prefill_cache:
+            self._prefill_cache[bucket] = jax.jit(
+                functools.partial(self.model.prefill,
+                                  cache_len=self.cache_len))
+        tl = (None if self.cfg.family in ("ssm", "hybrid")
+              else jnp.asarray([plen], jnp.int32))
+        logits, one_cache = self._prefill_cache[bucket](
+            self.params, {"tokens": jnp.asarray(padded)}, true_lens=tl)
+        # Merge the single-request cache into the batch cache at `slot`:
+        # kv leaves (L, B, T, K, hd); ssm conv (L, B, W, CH); ssd
+        # (L, B, H, P, N); index (B,).
+        def set_slot(big, small):
+            return big.at[:, slot].set(small[:, 0]) if big.ndim >= 2 \
+                else big.at[slot].set(small[0])
+        kv = (jax.tree.map(set_slot, self.cache.kv, one_cache.kv)
+              if self.cache.kv != () else ())
+        ssm = (jax.tree.map(set_slot, self.cache.ssm, one_cache.ssm)
+               if self.cache.ssm != () else ())
+        index = self.cache.index.at[slot].set(plen)
+        self.cache = Cache(kv=kv, ssm=ssm, index=index)
+        return int(jnp.argmax(logits[0, 0]))
+
+    def decode(self, tokens: np.ndarray) -> np.ndarray:
+        """One decode step for the whole batch; tokens: (slots,) i32."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens)[:, None])
+        return np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+
+    def reset_slot(self, slot: int) -> None:
+        self.cache = self.cache._replace(
+            index=self.cache.index.at[slot].set(0))

@@ -1,0 +1,126 @@
+"""AdamW optimizer + LR schedules, built from scratch (no optax offline).
+
+* fp32 first/second moments regardless of parameter dtype;
+* optional fp32 master copy when parameters are bf16 (mixed-precision
+  training: updates accumulate in fp32, params round to bf16);
+* global-norm gradient clipping;
+* linear-warmup + cosine-decay schedule;
+* optional int8 error-feedback state for compressed gradient all-reduce
+  (``distributed.collectives``) — the error-feedback residual lives next to
+  the moments so checkpointing captures it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any       # fp32 master params, or () when params are fp32
+    ef: Any           # error-feedback residuals, or () when uncompressed
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    use_master: bool = True         # fp32 master when params are low-prec
+    error_feedback: bool = False    # allocate EF residuals
+
+
+def cosine_lr(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(cfg: AdamWConfig, params) -> AdamWState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    low_prec = any(
+        x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros32, params),
+        v=jax.tree.map(zeros32, params),
+        master=(jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                if (cfg.use_master and low_prec) else ()),
+        ef=(jax.tree.map(zeros32, params) if cfg.error_feedback else ()),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_update(cfg: AdamWConfig, params, grads, state: AdamWState
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    ref = state.master if state.master != () else params
+
+    def upd(p32, m_, v_):
+        mh = m_ / bc1
+        vh = v_ / bc2
+        return (p32.astype(jnp.float32)
+                - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                        + cfg.weight_decay * p32.astype(jnp.float32)))
+
+    new_ref = jax.tree.map(upd, ref, m, v)
+    if state.master != ():
+        new_params = jax.tree.map(
+            lambda r, p: r.astype(p.dtype), new_ref, params)
+        new_master = new_ref
+    else:
+        new_params = jax.tree.map(
+            lambda r, p: r.astype(p.dtype), new_ref, params)
+        new_master = ()
+
+    new_state = AdamWState(step=step, m=m, v=v, master=new_master,
+                           ef=state.ef)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def state_logical_axes(param_axes, cfg: AdamWConfig, low_prec: bool):
+    """Optimizer-state logical axes mirror the parameter axes."""
+    return AdamWState(
+        step=(),
+        m=param_axes,
+        v=param_axes,
+        master=param_axes if (cfg.use_master and low_prec) else (),
+        ef=param_axes if cfg.error_feedback else (),
+    )

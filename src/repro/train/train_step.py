@@ -1,0 +1,205 @@
+"""Sharded train/serve step factories.
+
+``make_train_step`` builds the jitted ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function with in/out shardings resolved from
+the logical-axis trees (``distributed.sharding``), optional gradient
+accumulation (scan over microbatches, fp32 accumulator), and the optional
+int8 error-feedback compressed gradient all-reduce.
+
+``make_serve_steps`` builds the jitted ``prefill`` / ``decode`` pair with
+cache shardings (split-T flash-decoding layout over the model axis).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..distributed.collectives import compressed_psum_tree
+from ..distributed.sharding import MeshRules, current_rules, use_rules
+from ..launch import shapes as shapes_lib
+from ..models.model import Model
+from .optimizer import AdamWConfig, AdamWState, apply_update, init_state
+
+
+def tree_shardings(rules: MeshRules, structs, axes):
+    """Resolve a ShapeDtypeStruct tree + logical-axes tree -> shardings."""
+    def one(s, ax):
+        if ax == () or ax is None:
+            return NamedSharding(rules.mesh, PartitionSpec())
+        return rules.sharding(s.shape, ax, tag=str(ax))
+    return jax.tree.map(one, structs, axes,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def _opt_axes(model: Model, opt_cfg: AdamWConfig, zero1: bool = False):
+    param_axes = model.axes()
+    if zero1:
+        # ZeRO-1: optimizer states shard their d_model dims over "data"
+        # even though the parameters themselves replicate over it.
+        def z(ax):
+            return tuple("opt_embed" if a == "embed" else a for a in ax)
+        param_axes = jax.tree.map(
+            z, param_axes, is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x))
+    low_prec = model.cfg.param_dtype != "f32"
+    return AdamWState(
+        step=(),
+        m=param_axes,
+        v=param_axes,
+        master=(param_axes if (opt_cfg.use_master and low_prec) else ()),
+        ef=(param_axes if opt_cfg.error_feedback else ()),
+    )
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compressed_grads: bool = False,
+    mesh: Optional[Mesh] = None,
+):
+    """Returns (train_step, shardings) — jit-ready with explicit shardings.
+
+    With ``microbatches > 1`` the global batch splits along dim 0 and
+    gradients accumulate in fp32 across a ``lax.scan`` (memory for
+    activations scales with the microbatch, not the batch).
+    """
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        # Gradient accumulation: scan over microbatch slices.
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches)
+                             + x.shape[1:])
+        mb = jax.tree.map(reshape, batch)
+
+        def step(acc, one):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, one)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                acc, grads)
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, (losses, metricses) = jax.lax.scan(step, zero, mb)
+        loss = losses.mean()
+        metrics = jax.tree.map(
+            lambda m: m.mean(axis=0) if hasattr(m, "ndim") and m.ndim > 0
+            else m, metricses)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if compressed_grads and mesh is not None and "data" in mesh.shape:
+            grads, new_ef = compressed_psum_tree(
+                grads, opt_state.ef, mesh, axis="data")
+            opt_state = opt_state._replace(ef=new_ef)
+        params, opt_state, om = apply_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "loss_out": loss}
+
+    return train_step
+
+
+def lower_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh,
+                     shape_name: str, *, microbatches: int = 1,
+                     rule_overrides: Optional[Dict] = None,
+                     compressed_grads: bool = False,
+                     zero1: bool = False,
+                     donate: bool = True):
+    """Lower (no compile) the train step for (arch × shape × mesh).
+
+    ``zero1``: ZeRO-1 layout — parameters replicate over "data" (their
+    model-axis dims stay sharded) while optimizer moments/master shard
+    their d_model dims over "data".  Removes the per-layer FSDP parameter
+    all-gathers (which XLA hoists out of the layer scan, defeating FSDP's
+    memory promise) at the price of the params+grads being data-replicated.
+    """
+    cfg = model.cfg
+    if zero1:
+        rule_overrides = {**(rule_overrides or {}), "embed": None}
+    with use_rules(mesh, rule_overrides) as rules:
+        batch_structs, batch_axes = shapes_lib.input_specs(cfg, shape_name)
+        param_structs = model.abstract()
+        param_axes = model.axes()
+        opt_structs = jax.eval_shape(
+            lambda p: init_state(opt_cfg, p), param_structs)
+        opt_axes = _opt_axes(model, opt_cfg, zero1=zero1)
+
+        param_sh = tree_shardings(rules, param_structs, param_axes)
+        opt_sh = tree_shardings(rules, opt_structs, opt_axes)
+        batch_sh = tree_shardings(rules, batch_structs, batch_axes)
+
+        step = make_train_step(
+            model, opt_cfg, microbatches=microbatches,
+            compressed_grads=compressed_grads, mesh=mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(param_structs, opt_structs,
+                                   batch_structs)
+        return lowered, rules
+
+
+def lower_serve_step(model: Model, mesh: Mesh, shape_name: str,
+                     rule_overrides: Optional[Dict] = None):
+    """Lower prefill (shape kind 'prefill') or decode ('decode')."""
+    cfg = model.cfg
+    spec = shapes_lib.SHAPES[shape_name]
+    with use_rules(mesh, rule_overrides) as rules:
+        param_structs = model.abstract()
+        param_sh = tree_shardings(rules, param_structs, model.axes())
+        if spec.kind == "prefill":
+            batch_structs, batch_axes = shapes_lib.input_specs(
+                cfg, shape_name)
+            batch_sh = tree_shardings(rules, batch_structs, batch_axes)
+
+            cache_len = spec.seq + (cfg.n_frontend_tokens
+                                    if cfg.family == "vlm" else 0)
+
+            def prefill(params, batch):
+                return model.prefill(params, batch, cache_len)
+
+            jitted = jax.jit(prefill,
+                             in_shardings=(param_sh, batch_sh))
+            with mesh:
+                lowered = jitted.lower(param_structs, batch_structs)
+        elif spec.kind == "decode":
+            (cache_structs, tok_structs), (cache_axes, tok_axes) = \
+                shapes_lib.input_specs(cfg, shape_name)
+            cache_sh = tree_shardings(rules, cache_structs, cache_axes)
+            tok_sh = tree_shardings(rules, tok_structs, tok_axes)
+
+            def decode(params, cache, tok):
+                return model.decode_step(params, cache, tok)
+
+            jitted = jax.jit(decode,
+                             in_shardings=(param_sh, cache_sh, tok_sh),
+                             donate_argnums=(1,))
+            with mesh:
+                lowered = jitted.lower(param_structs, cache_structs,
+                                       tok_structs)
+        else:
+            raise ValueError(spec.kind)
+        return lowered, rules

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests run against the in-tree package; smoke tests must see the real
+# (single-device) platform — the 512-device XLA flag belongs ONLY to
+# launch/dryrun.py.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,103 @@
+"""Detection-adaptation loop (Algorithm 1) end-to-end properties."""
+
+import numpy as np
+import pytest
+
+from repro.core.adaptation import AdaptiveRunner, CompositeAdaptiveRunner, \
+    merge_metrics
+from repro.core.decision import make_policy
+from repro.core.engine import EngineConfig
+from repro.core.patterns import (CompositePattern, chain_predicates,
+                                 seq_pattern)
+from repro.data.cep_streams import StreamConfig, make_stream
+
+PAT = seq_pattern([0, 1, 2, 3], window=4.0,
+                  predicates=chain_predicates([0, 1, 2, 3], theta=-0.3))
+SCFG = StreamConfig(n_types=4, n_attrs=1, n_chunks=60, chunk_cap=256,
+                    base_rate=15.0, seed=3)
+ECFG = EngineConfig(b_cap=128, m_cap=4096)
+
+
+def run(policy_name, kind="traffic", planner="greedy", **kw):
+    r = AdaptiveRunner(PAT, planner=planner,
+                       policy=make_policy(policy_name, **kw),
+                       engine_cfg=ECFG)
+    return r.run(make_stream(kind, SCFG))
+
+
+def test_matches_are_policy_independent():
+    """Adaptation must never change WHAT is detected, only how fast."""
+    results = [run(p, kind="stocks") for p in
+               ("static", "unconditional", "invariant")]
+    matches = {m.full_matches for m in results}
+    assert len(matches) == 1, matches
+    assert all(m.overflow == 0 for m in results)
+
+
+def test_invariant_zero_false_positives_d0():
+    m = run("invariant", kind="traffic", k=1, d=0.0)
+    assert m.false_positives == 0  # Theorem 1 in the full loop
+    assert m.replans <= m.chunks
+
+
+def test_invariant_replans_far_fewer_than_unconditional():
+    mu = run("unconditional", kind="traffic")
+    mi = run("invariant", kind="traffic", d=0.0)
+    assert mi.replans < mu.replans / 5
+    # ... while deploying (almost) as many genuinely-better plans.
+    assert mi.deployments >= mu.deployments - 1
+
+
+def test_distance_d_reduces_deployments():
+    m0 = run("invariant", kind="stocks", d=0.0)
+    m3 = run("invariant", kind="stocks", d=0.5)
+    assert m3.deployments <= m0.deployments
+
+
+def test_migration_no_duplicate_detection():
+    """Unconditional policy migrates constantly; match count must still
+    equal the static run's (exactly-once under the [36] split)."""
+    ms = run("static", kind="traffic")
+    mu = run("unconditional", kind="traffic")
+    assert ms.full_matches == mu.full_matches
+    assert mu.migration_chunks > 0
+
+
+def test_zstream_loop_runs():
+    m = run("invariant", kind="traffic", planner="zstream", d=0.1)
+    assert m.chunks == SCFG.n_chunks
+    assert m.false_positives == 0
+
+
+def test_composite_pattern_runs():
+    comp = CompositePattern((
+        seq_pattern([0, 1], 4.0, chain_predicates([0, 1], theta=-0.3)),
+        seq_pattern([2, 3], 4.0, chain_predicates([2, 3], theta=-0.3)),
+    ))
+    runner = CompositeAdaptiveRunner(
+        comp, planner="greedy", policy=None, engine_cfg=ECFG)
+    # composite branches need their own policies; rebuild with policies
+    for r in runner.runners:
+        r.policy = make_policy("invariant")
+    cfg2 = StreamConfig(n_types=4, n_attrs=1, n_chunks=30, chunk_cap=256,
+                        base_rate=15.0, seed=5)
+    ms = runner.run([make_stream("traffic", cfg2),
+                     make_stream("traffic", StreamConfig(
+                         n_types=4, n_attrs=1, n_chunks=30, chunk_cap=256,
+                         base_rate=15.0, seed=6))])
+    total = merge_metrics(ms)
+    assert total.chunks == 60
+
+
+def test_regret_measurement():
+    r = AdaptiveRunner(PAT, planner="greedy",
+                       policy=make_policy("static"), engine_cfg=ECFG,
+                       measure_regret=True)
+    m = r.run(make_stream("traffic", SCFG))
+    assert m.regret_samples > 0
+    r2 = AdaptiveRunner(PAT, planner="greedy",
+                        policy=make_policy("invariant", d=0.0),
+                        engine_cfg=ECFG, measure_regret=True)
+    m2 = r2.run(make_stream("traffic", SCFG))
+    # The adaptive run tracks the optimum at least as well as static.
+    assert m2.regret <= m.regret + 1e-9

@@ -1,0 +1,101 @@
+"""Pallas window_join kernel vs the pure-jnp oracle.
+
+The Pallas kernel body runs in interpret mode on CPU (TPU is the target);
+shapes and dtypes are swept and a hypothesis property test fuzzes the
+constraint semantics.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import window_join_ref
+
+
+def _case(rng, C, M, B):
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    op = rng.integers(0, 4, size=(C,)).astype(np.int32)
+    th = rng.normal(scale=0.5, size=(C,)).astype(np.float32)
+    return L, R, op, th
+
+
+@pytest.mark.parametrize("C,M,B", [
+    (1, 1, 1), (2, 7, 5), (4, 128, 128), (9, 130, 257),
+    (16, 64, 300), (32, 256, 384),
+])
+def test_pallas_matches_ref_shapes(C, M, B, rng):
+    L, R, op, th = _case(rng, C, M, B)
+    a = np.asarray(ops.window_join(L, R, op, th, backend="ref"))
+    b = np.asarray(ops.window_join(L, R, op, th, backend="interpret"))
+    assert (a == b).all()
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pallas_dtypes(dtype, rng):
+    L, R, op, th = _case(rng, 4, 33, 65)
+    L, R, th = L.astype(dtype), R.astype(dtype), th.astype(dtype)
+    a = np.asarray(ops.window_join(L, R, op, th, backend="ref"))
+    b = np.asarray(ops.window_join(L, R, op, th, backend="interpret"))
+    assert (a == b).all()
+
+
+def test_count_kernel(rng):
+    L, R, op, th = _case(rng, 6, 100, 140)
+    op[0] = 1  # ensure at least one comparing row (NaN-pad exactness)
+    want = int(np.asarray(
+        ops.window_join(L, R, op, th, backend="ref")).sum())
+    got = int(ops.window_join_count(L, R, op, th, backend="interpret"))
+    assert want == got
+
+
+def test_opcode_semantics():
+    L = np.array([[0.0, 1.0, 2.0]], np.float32)
+    R = np.array([[1.0]], np.float32)
+    # op LT theta 0: l < r
+    ok = np.asarray(ops.window_join(
+        L, R, np.array([1], np.int32), np.array([0.0], np.float32),
+        backend="interpret"))
+    assert ok[:, 0].tolist() == [True, False, False]
+    # op GT theta 0: l > r
+    ok = np.asarray(ops.window_join(
+        L, R, np.array([2], np.int32), np.array([0.0], np.float32),
+        backend="interpret"))
+    assert ok[:, 0].tolist() == [False, False, True]
+    # op ABS theta 0.5
+    ok = np.asarray(ops.window_join(
+        L, R, np.array([3], np.int32), np.array([0.5], np.float32),
+        backend="interpret"))
+    assert ok[:, 0].tolist() == [False, True, False]
+    # op NONE
+    ok = np.asarray(ops.window_join(
+        L, R, np.array([0], np.int32), np.array([0.0], np.float32),
+        backend="interpret"))
+    assert ok.all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    C=st.integers(1, 8), M=st.integers(1, 40), B=st.integers(1, 40),
+    seed=st.integers(0, 1000),
+)
+def test_property_and_of_rows(C, M, B, seed):
+    """ok must equal the row-wise AND of single-row evaluations."""
+    rng = np.random.default_rng(seed)
+    L, R, op, th = _case(rng, C, M, B)
+    full = np.asarray(ops.window_join(L, R, op, th, backend="interpret"))
+    acc = np.ones((M, B), bool)
+    for c in range(C):
+        acc &= np.asarray(window_join_ref(
+            L[c:c + 1], R[c:c + 1], op[c:c + 1], th[c:c + 1]))
+    assert (full == acc).all()
+
+
+def test_backend_selection():
+    assert ops.default_backend() in ("ref", "pallas")
+    ops.set_backend("interpret")
+    try:
+        assert ops.get_backend() == "interpret"
+    finally:
+        ops.set_backend(None)

@@ -1,0 +1,213 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + numerics:
+forward/loss/grad finite, prefill+decode == full forward, flash == direct,
+SSD == naive recurrence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke, list_archs
+from repro.models.config import ModelConfig
+from repro.models.layers import attention, attn_defs
+from repro.models.model import Model
+from repro.models.params import count_params, init_params
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def make_inputs(cfg, rng, with_labels=True):
+    batch = {}
+    if cfg.family == "vlm":
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        batch["patch_embeds"] = jnp.asarray(rng.normal(
+            size=(B, cfg.n_frontend_tokens, cfg.d_model)), jnp.float32)
+    elif cfg.frontend_is_embedding:
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch, rng):
+    """Assignment requirement: reduced config, one forward/train step on
+    CPU, asserting output shapes + no NaNs."""
+    cfg = get_smoke(arch)
+    m = Model(cfg, remat="none")
+    prm = m.init(KEY)
+    batch = make_inputs(cfg, rng)
+    logits, _ = m.forward(prm, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    loss, metrics = m.loss(prm, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: m.loss(p, batch)[0])(prm)
+    gn = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    # decode path
+    logits_p, cache = m.prefill(prm, make_inputs(cfg, rng, False), 32)
+    step_in = (jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)),
+                           jnp.float32) if cfg.frontend_is_embedding
+               else batch.get("tokens", jnp.zeros((B, 1), jnp.int32))[:, :1])
+    logits_d, cache = m.decode_step(prm, cache, step_in)
+    assert logits_d.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits_d, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    L, d, h, kv, ff, v = spec
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == v
+    if h:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if ff:
+        assert cfg.d_ff == ff
+    if arch == "deepseek-moe-16b":
+        assert (cfg.n_experts, cfg.n_shared_experts, cfg.top_k) == (64, 2, 6)
+    if arch == "dbrx-132b":
+        assert (cfg.n_experts, cfg.top_k) == (16, 4)
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+    if arch == "olmo-1b":
+        assert cfg.norm == "np_ln"
+
+
+def test_param_count_matches_defs():
+    for arch in ("phi3-mini-3.8b", "deepseek-moe-16b", "mamba2-1.3b",
+                 "zamba2-1.2b"):
+        cfg = get_config(arch)
+        m = Model(cfg)
+        assert count_params(m.param_defs()) == cfg.param_count(), arch
+
+
+def test_full_param_counts_plausible():
+    """Sanity vs the published model sizes (loose bounds; exact configs
+    differ in vocab/ties but must land in the right ballpark)."""
+    expect = {"phi3-mini-3.8b": (3.0e9, 4.6e9), "olmo-1b": (0.9e9, 1.6e9),
+              "yi-34b": (30e9, 38e9), "stablelm-12b": (10e9, 14e9),
+              "deepseek-moe-16b": (14e9, 20e9), "dbrx-132b": (120e9, 145e9),
+              "mamba2-1.3b": (1.0e9, 1.7e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_prefill_decode_consistency_dense(rng):
+    cfg = get_smoke("phi3-mini-3.8b")
+    m = Model(cfg, remat="none")
+    prm = m.init(KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full, _ = m.forward(prm, {"tokens": toks})
+    lp, cache = m.prefill(prm, {"tokens": toks[:, :S - 2]}, S + 4)
+    outs = [lp]
+    for t in range(S - 2, S):
+        ld, cache = m.decode_step(prm, cache, toks[:, t:t + 1])
+        outs.append(ld)
+    got = jnp.concatenate(outs, axis=1)
+    assert float(jnp.abs(got - full[:, S - 3:, :]).max()) < 1e-3
+
+
+def test_prefill_decode_consistency_ssm(rng):
+    cfg = get_smoke("mamba2-1.3b")
+    m = Model(cfg, remat="none")
+    prm = m.init(KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full, _ = m.forward(prm, {"tokens": toks})
+    lp, cache = m.prefill(prm, {"tokens": toks[:, :8]}, S)
+    outs = [lp]
+    for t in range(8, S):
+        ld, cache = m.decode_step(prm, cache, toks[:, t:t + 1])
+        outs.append(ld)
+    got = jnp.concatenate(outs, axis=1)
+    assert float(jnp.abs(got - full[:, 7:, :]).max()) < 1e-3
+
+
+def test_flash_equals_direct(rng):
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+                      attn_kv_block=16)
+    prm = init_params(attn_defs(cfg), KEY, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, 50, 64)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(50, dtype=jnp.int32), (B, 50))
+    for prefix, win in [(0, 0), (7, 0), (0, 20), (5, 13)]:
+        o1, _ = attention(x, prm, cfg.with_(attn_direct_max=4096), pos,
+                          prefix_len=prefix, window=win)
+        o2, _ = attention(x, prm, cfg.with_(attn_direct_max=1), pos,
+                          prefix_len=prefix, window=win)
+        assert float(jnp.abs(o1 - o2).max()) < 1e-5
+
+
+def test_ssd_matches_naive_recurrence(rng):
+    b, s, h, p, n = 2, 16, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.1, 1.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    hst = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        dec = np.exp(np.asarray(dt[:, t]) * np.asarray(A)[None, :])
+        xd = np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None]
+        hst = hst * dec[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", xd, np.asarray(Bm[:, t]))
+        ys.append(np.einsum("bhpn,bn->bhp", hst, np.asarray(Cm[:, t])))
+    y_ref = np.stack(ys, 1)
+    for chunk, unroll in [(4, 1), (8, 2), (16, 16)]:
+        y, hf = ssd_chunked(x, dt, A, Bm, Cm, chunk, unroll=unroll)
+        assert np.abs(np.asarray(y) - y_ref).max() < 1e-4
+        assert np.abs(np.asarray(hf) - hst).max() < 1e-4
+
+
+def test_vlm_prefix_is_bidirectional(rng):
+    """Changing a LATER patch embedding must affect EARLIER prefix
+    positions' logits path (prefix-LM), but never text causality."""
+    cfg = get_smoke("paligemma-3b")
+    m = Model(cfg, remat="none")
+    prm = m.init(KEY)
+    batch = make_inputs(cfg, rng, with_labels=False)
+    l1, _ = m.forward(prm, batch)
+    pe = np.asarray(batch["patch_embeds"]).copy()
+    pe[:, -1] += 10.0  # bump the LAST patch
+    l2, _ = m.forward(prm, dict(batch, patch_embeds=jnp.asarray(pe)))
+    # all text logits may change (text attends to the prefix)...
+    assert float(jnp.abs(l1 - l2).max()) > 0
+    # ...and causality within text: perturbing the last TEXT token leaves
+    # earlier text logits unchanged.
+    tk = np.asarray(batch["tokens"]).copy()
+    tk[:, -1] = (tk[:, -1] + 1) % cfg.vocab
+    l3, _ = m.forward(prm, dict(batch, tokens=jnp.asarray(tk)))
+    assert float(jnp.abs(l1[:, :-1] - l3[:, :-1]).max()) < 1e-5
+
+
+def test_hybrid_shared_block_actually_shared():
+    cfg = get_smoke("zamba2-1.2b")
+    m = Model(cfg)
+    defs = m.param_defs()
+    assert "shared_attn" in defs
+    # shared attn params are NOT stacked per layer
+    assert defs["shared_attn"]["attn"]["wq"].shape[0] == cfg.d_model

@@ -1,0 +1,58 @@
+"""Pattern AST + predicate tensor structure."""
+
+import numpy as np
+import pytest
+
+from repro.core.patterns import (
+    PRED_ABS_LE, PRED_GT, PRED_LT, PRED_NONE,
+    CompositePattern, Predicate, and_pattern, chain_predicates,
+    kleene_pattern, neg_pattern, seq_pattern,
+)
+
+
+def test_seq_basics():
+    p = seq_pattern([3, 1, 7], window=5.0)
+    assert p.n == 3 and p.is_sequence and p.window == 5.0
+
+
+def test_pred_tensor_mirroring():
+    preds = (Predicate(0, 1, PRED_LT, 0, 0, 0.5),
+             Predicate(2, 1, PRED_GT, 0, 0, 0.1))
+    p = seq_pattern([0, 1, 2], 10.0, preds)
+    t = p.pred_tensors()
+    assert t["op"][0, 1] == PRED_LT and t["op"][1, 0] == PRED_GT
+    assert t["op"][2, 1] == PRED_GT and t["op"][1, 2] == PRED_LT
+    assert t["theta"][0, 1] == t["theta"][1, 0] == 0.5
+    assert t["op"][0, 2] == PRED_NONE
+
+
+def test_abs_pred_self_mirror():
+    p = seq_pattern([0, 1], 1.0, (Predicate(0, 1, PRED_ABS_LE, 0, 0, 2.0),))
+    t = p.pred_tensors()
+    assert t["op"][0, 1] == t["op"][1, 0] == PRED_ABS_LE
+
+
+def test_selectivity_pairs_upper_triangle():
+    p = seq_pattern([0, 1, 2, 3], 1.0, chain_predicates([0, 1, 2, 3]))
+    assert p.selectivity_pairs() == ((0, 1), (1, 2), (2, 3))
+
+
+def test_chain_predicates_semantics():
+    c = chain_predicates([5, 6, 7], op=PRED_LT, theta=0.25)
+    assert len(c) == 2
+    assert c[0].a_type == 5 and c[0].b_type == 6 and c[0].theta == 0.25
+
+
+def test_negation_and_kleene_flags():
+    n = neg_pattern([0, 1], 5.0, negated_type=2, negated_pos=1)
+    assert n.negated_type == 2 and n.negated_pos == 1 and n.is_sequence
+    k = kleene_pattern([0, 1, 2], 5.0, kleene_pos=1)
+    assert k.kleene_pos == 1 and k.is_sequence
+    a = and_pattern([0, 1], 5.0)
+    assert not a.is_sequence
+
+
+def test_composite_window():
+    c = CompositePattern((seq_pattern([0, 1], 3.0),
+                          seq_pattern([2, 3], 7.0)))
+    assert c.window == 7.0

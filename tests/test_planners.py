@@ -1,0 +1,124 @@
+"""Plan generators: correctness vs brute force + DCS structure."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.greedy import greedy_order_plan
+from repro.core.patterns import chain_predicates, seq_pattern, and_pattern
+from repro.core.plans import (OrderPlan, TreeNode, plan_cost, tree_cost)
+from repro.core.stats import Stat
+from repro.core.zstream import zstream_tree_plan
+
+
+def rand_stat(rng, n, pattern=None, skew=1.0):
+    """Random stats; pairs without a defined predicate get selectivity 1
+    (the estimator's behaviour, paper §4.1) so the symbolic planners and
+    the numeric cost oracle agree."""
+    rates = rng.uniform(0.5, 20.0, n) ** skew
+    sel = rng.uniform(0.05, 0.95, (n, n))
+    sel = (sel + sel.T) / 2
+    if pattern is not None:
+        mask = np.ones((n, n), bool)
+        for p, q in pattern.selectivity_pairs():
+            mask[p, q] = mask[q, p] = False
+        sel[mask] = 1.0
+    np.fill_diagonal(sel, 1.0)
+    return Stat(rates, sel)
+
+
+def test_greedy_no_preds_sorts_by_rate(rng):
+    pat = seq_pattern([0, 1, 2, 3], 10.0)
+    stat = Stat(np.array([7.0, 1.0, 9.0, 3.0]), np.ones((4, 4)))
+    plan, dcs = greedy_order_plan(pat, stat)
+    assert plan.order == (1, 3, 0, 2)
+    # min-sort DCS sizes: n-1, n-2, ..., 0 (paper §3.1)
+    assert [len(c) for _, c in dcs] == [3, 2, 1, 0]
+
+
+def test_greedy_step_objective(rng):
+    """Each greedy step must pick the argmin of the §4.1 expression."""
+    pat = seq_pattern([0, 1, 2, 3], 10.0,
+                      chain_predicates([0, 1, 2, 3], theta=0.2))
+    pred_pairs = set(pat.selectivity_pairs())
+    for trial in range(5):
+        stat = rand_stat(np.random.default_rng(trial), 4)
+        plan, _ = greedy_order_plan(pat, stat)
+        chosen = []
+        for step, j in enumerate(plan.order):
+            remaining = [x for x in range(4) if x not in chosen]
+
+            def score(c):
+                # selectivity 1 where no predicate is defined (§4.1)
+                v = stat.rates[c]
+                for k in chosen:
+                    if (min(k, c), max(k, c)) in pred_pairs:
+                        v *= stat.sel[k, c]
+                return v
+            best = min(remaining, key=lambda c: (score(c), c))
+            assert j == best
+            chosen.append(j)
+
+
+def _all_interval_trees(lo, hi):
+    if hi - lo == 1:
+        yield TreeNode(leaf=lo)
+        return
+    for k in range(lo + 1, hi):
+        for left in _all_interval_trees(lo, k):
+            for right in _all_interval_trees(k, hi):
+                yield TreeNode(left=left, right=right)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+def test_zstream_dp_optimal_vs_enumeration(n, rng):
+    pat = seq_pattern(list(range(n)), 10.0,
+                      chain_predicates(list(range(n)), theta=0.1))
+    for trial in range(3):
+        stat = rand_stat(np.random.default_rng(100 + trial), n, pat)
+        plan, dcs = zstream_tree_plan(pat, stat)
+        best = min(_all_interval_trees(0, n),
+                   key=lambda t: tree_cost(t, stat))
+        assert abs(tree_cost(plan.root, stat)
+                   - tree_cost(best, stat)) < 1e-9
+
+
+def test_zstream_dcs_counts():
+    """Interval of length L has L-1 splits -> L-2 conditions per node."""
+    n = 5
+    pat = seq_pattern(list(range(n)), 10.0)
+    stat = rand_stat(np.random.default_rng(7), n, pat)
+    plan, dcs = zstream_tree_plan(pat, stat)
+    assert len(dcs) == n - 1  # one DCS per internal node
+    for block, conds in dcs:
+        lo, hi = block.split(":")[1].split("..")
+        length = int(hi) - int(lo) + 1
+        assert len(conds) == length - 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_planners_deterministic(n, seed):
+    rng = np.random.default_rng(seed)
+    pat = and_pattern(list(range(n)), 10.0,
+                      chain_predicates(list(range(n)), theta=0.3))
+    stat = rand_stat(rng, n, pat)
+    p1, _ = greedy_order_plan(pat, stat)
+    p2, _ = greedy_order_plan(pat, stat)
+    assert p1 == p2
+    t1, _ = zstream_tree_plan(pat, stat)
+    t2, _ = zstream_tree_plan(pat, stat)
+    assert t1 == t2
+
+
+def test_deciding_conditions_hold_at_creation(rng):
+    pat = seq_pattern([0, 1, 2, 3, 4], 10.0,
+                      chain_predicates(list(range(5)), theta=0.1))
+    stat = rand_stat(rng, 5, pat)
+    for planner in (greedy_order_plan, zstream_tree_plan):
+        _, dcs = planner(pat, stat)
+        for _, conds in dcs:
+            for c in conds:
+                assert c.margin(stat) >= -1e-9, str(c)

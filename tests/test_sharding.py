@@ -1,0 +1,98 @@
+"""Logical-axis resolver: divisibility + duplicate-axis fallbacks; and a
+subprocess lowering test on a multi-device host mesh."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.distributed.sharding import DEFAULT_RULES, MeshRules
+
+
+class FakeMesh:
+    """Just enough of a Mesh for the resolver (shape dict lookups)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def rules(shape=None):
+    return MeshRules(mesh=FakeMesh(shape or {"data": 4, "model": 8}),
+                     rules=dict(DEFAULT_RULES))
+
+
+def test_divisible_dims_shard():
+    r = rules()
+    spec = r.resolve((64, 32), ("embed", "heads"), "w")
+    assert tuple(spec) == ("data", "model")
+    assert not r.fallbacks
+
+
+def test_indivisible_falls_back():
+    r = rules()
+    spec = r.resolve((64, 7), ("embed", "heads"), "w")  # 7 % 8 != 0
+    assert tuple(spec) == ("data", None)
+    assert len(r.fallbacks) == 1
+
+
+def test_duplicate_axis_falls_back():
+    r = rules()
+    # experts -> model, ff -> model: second use must replicate.
+    spec = r.resolve((16, 64, 128), ("experts", "embed", "ff"), "moe")
+    assert tuple(spec) == ("model", "data", None)
+    assert any("already used" in f for f in r.fallbacks)
+
+
+def test_missing_mesh_axis_dropped():
+    r = rules({"data": 4, "model": 8})  # no "pod" on single-pod mesh
+    spec = r.resolve((32,), ("batch",), "tokens")
+    assert tuple(spec) == ("data",)
+
+
+def test_multi_axis_batch():
+    r = rules({"pod": 2, "data": 4, "model": 8})
+    spec = r.resolve((32, 128), ("batch", "seq"), "tokens")
+    assert tuple(spec) == (("pod", "data"), None)
+
+
+def test_unknown_logical_name_replicates():
+    r = rules()
+    spec = r.resolve((10,), ("no_such_axis",), "x")
+    assert tuple(spec) == (None,)
+
+
+@pytest.mark.slow
+def test_small_mesh_lowering_subprocess():
+    """Exercise real pjit lowering on an 8-device host platform — kept in
+    a subprocess so the test session's jax stays single-device."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax
+        from jax.sharding import AxisType
+        from repro.configs import get_smoke
+        from repro.models.model import Model
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.train_step import lower_train_step, \\
+            lower_serve_step
+        from repro.launch import shapes as SL
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        SL.SHAPES["t"] = SL.ShapeSpec("t", "train", 64, 8)
+        SL.SHAPES["d"] = SL.ShapeSpec("d", "decode", 64, 8)
+        for arch in ("olmo-1b", "deepseek-moe-16b", "zamba2-1.2b"):
+            cfg = get_smoke(arch).with_(param_dtype="bf16", dtype="bf16")
+            m = Model(cfg, remat="full")
+            lowered, _ = lower_train_step(m, AdamWConfig(), mesh, "t")
+            lowered.compile()
+            lowered, _ = lower_serve_step(m, mesh, "d")
+            lowered.compile()
+        print("LOWER_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=900)
+    assert "LOWER_OK" in out.stdout, out.stderr[-2000:]

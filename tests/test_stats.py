@@ -1,0 +1,55 @@
+"""Sliding-window statistics estimation."""
+
+import numpy as np
+
+from repro.core.patterns import Predicate, PRED_LT, seq_pattern
+from repro.core.stats import (SlidingWindowEstimator, Stat,
+                              sample_selectivities, uniform_stat)
+
+
+def test_rate_estimation_converges(rng):
+    est = SlidingWindowEstimator(n=3, num_buckets=8)
+    true = np.array([10.0, 3.0, 0.5])
+    for _ in range(50):
+        counts = rng.poisson(true * 2.0)
+        est.update(counts, duration=2.0)
+    got = est.snapshot().rates
+    assert np.allclose(got, true, rtol=0.25)
+
+
+def test_window_forgets_old_regime(rng):
+    est = SlidingWindowEstimator(n=1, num_buckets=4)
+    for _ in range(10):
+        est.update(np.array([100.0]), 1.0)
+    for _ in range(4):  # window length — old buckets fully evicted
+        est.update(np.array([1.0]), 1.0)
+    assert est.snapshot().rates[0] < 5.0
+
+
+def test_selectivity_sampling(rng):
+    pat = seq_pattern([0, 1], 10.0,
+                      (Predicate(0, 1, PRED_LT, 0, 0, 0.0),))
+    t = pat.pred_tensors()
+    pos_of = {0: 0, 1: 1}
+    # attrs of type 0 ~ N(-1), type 1 ~ N(+1): P(a0 < a1) ≈ 0.92
+    tid = np.repeat([0, 1], 500).astype(np.int32)
+    attrs = np.concatenate([rng.normal(-1, 1, (500, 1)),
+                            rng.normal(1, 1, (500, 1))]).astype(np.float32)
+    trials, hits = sample_selectivities(
+        rng, tid, attrs, t, pos_of, 2, samples_per_pair=512)
+    sel = hits[0, 1] / trials[0, 1]
+    assert 0.8 < sel < 1.0
+
+
+def test_unsampled_pairs_default_to_one():
+    est = SlidingWindowEstimator(n=2)
+    est.update(np.array([1.0, 1.0]), 1.0)
+    s = est.snapshot()
+    assert s.sel[0, 1] == 1.0
+
+
+def test_stat_values_flat():
+    s = uniform_stat(3, rate=2.0, sel=0.5)
+    v = s.values()
+    assert v.shape == (3 + 6,)
+    assert (v[:3] == 2.0).all() and (v[3:] == 0.5).all()
