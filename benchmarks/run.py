@@ -14,16 +14,21 @@ import time
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    scale = ap.add_mutually_exclusive_group()
+    scale.add_argument("--full", action="store_true")
+    scale.add_argument("--quick", action="store_true",
+                      help="bounded scale — the default; the explicit "
+                           "flag exists for CI invocations and conflicts "
+                           "with --full")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,table1,fig69,kernel,moe,"
+                    help="comma list: fig5,table1,fig69,kernel,fleet,moe,"
                          "roofline")
     args = ap.parse_args(argv)
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from . import (adaptive_moe, fig5_distance, fig69_methods,
-                   kernel_bench, roofline, table1_davg)
+                   fleet_bench, kernel_bench, roofline, table1_davg)
 
     sections = [
         ("fig5", "Figure 5 — throughput vs invariant distance d",
@@ -34,6 +39,8 @@ def main(argv=None) -> None:
          lambda: fig69_methods.main([], quick=quick)),
         ("kernel", "window_join kernel microbenchmark",
          lambda: kernel_bench.main([], quick=quick)),
+        ("fleet", "fleet executor — vmapped vs per-partition loop",
+         lambda: fleet_bench.main([], quick=quick)),
         ("moe", "adaptive MoE expert placement",
          lambda: adaptive_moe.main([], quick=quick)),
         ("roofline", "roofline table from dry-run artifacts",

@@ -5,12 +5,23 @@ Control plane: instrumented plan generators (``greedy``, ``zstream``),
 invariant machinery (``invariants``), decision policies (``decision``),
 statistics estimation (``stats``), the detection-adaptation loop
 (``adaptation``).  Data plane: the vectorized engine (``engine``) backed by
-the ``repro.kernels`` window-join kernel.
+the ``repro.kernels`` window-join kernel; ``fleet`` vmaps it across stream
+partitions.  ``ref_engine`` is the slow brute-force ground-truth oracle.
 """
 
 from .adaptation import AdaptiveRunner, RunMetrics  # noqa: F401
 from .decision import make_policy  # noqa: F401
 from .engine import EngineConfig, OrderEngine, TreeEngine  # noqa: F401
+from .fleet import (  # noqa: F401
+    FleetEngine,
+    FleetEstimator,
+    FleetMetrics,
+    FleetRunner,
+    route_events,
+    stack_chunks,
+    stacked_streams,
+)
+from .ref_engine import RefEngine, brute_force_matches  # noqa: F401
 from .greedy import greedy_order_plan  # noqa: F401
 from .invariants import InvariantSet, d_avg_estimate  # noqa: F401
 from .patterns import (  # noqa: F401

@@ -209,6 +209,7 @@ class _Spec:
     b_attr_t: np.ndarray
     theta_t: np.ndarray
     kleene_pos: Optional[int]
+    kleene_bound: Optional[int]
     has_neg: bool
     negated_pos: Optional[int]
     # negated-predicate rows: (match_pos, op, match_attr, neg_attr, theta)
@@ -242,6 +243,7 @@ def make_spec(pattern: Pattern) -> _Spec:
         b_attr_t=t["b_attr"],
         theta_t=t["theta"],
         kleene_pos=pattern.kleene_pos,
+        kleene_bound=pattern.kleene_bound,
         has_neg=pattern.negated_type is not None,
         negated_pos=pattern.negated_pos,
         neg_rows=tuple(neg_rows),
@@ -377,6 +379,8 @@ def _finalize(spec: _Spec, cfg: EngineConfig, buffers: Buffers,
                              spec.op_t[q, kp], spec.theta_t[q, kp]))
         ok = _any_match(spec, cfg, pm, rows, m, b)
         comp = jnp.maximum(ok.sum(axis=1) - 1, 0)  # exclude the match's own
+        if spec.kleene_bound is not None:
+            comp = jnp.minimum(comp, spec.kleene_bound)
         closure = jnp.where(completed, comp, 0).sum().astype(jnp.int32)
 
     return completed.sum().astype(jnp.int32), neg_rejected, closure
@@ -394,7 +398,10 @@ class OrderEngine:
         self.pattern = pattern
         self.spec = make_spec(pattern)
         self.cfg = cfg
-        self._process = jax.jit(self._make_process())
+        # The raw (un-jitted) pure function is kept for vmapping: the fleet
+        # executor batches K partitions through one compiled vmap of it.
+        self.process_fn = self._make_process()
+        self._process = jax.jit(self.process_fn)
 
     def init_state(self) -> Buffers:
         return init_buffers(self.spec, self.cfg)
@@ -492,7 +499,8 @@ class TreeEngine:
         self.pattern = pattern
         self.spec = make_spec(pattern)
         self.cfg = cfg
-        self._process = jax.jit(self._make_process())
+        self.process_fn = self._make_process()
+        self._process = jax.jit(self.process_fn)
 
     def init_state(self) -> Buffers:
         return init_buffers(self.spec, self.cfg)

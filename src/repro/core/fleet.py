@@ -1,0 +1,498 @@
+"""Partitioned fleet executor: K independent streams, one compiled plane.
+
+The paper's adaptation loop (§2.2, Algorithm 1) is formulated for a single
+stream.  Production traffic is *many* independent stream partitions
+(tenants, symbols, sensor groups), each with its own statistical regime —
+partition-parallel CEP in the spirit of Xiao & Aritsugi (2018).  Because
+this engine's plans are **data, not code** (an order vector / slot
+program), the whole data plane can be ``vmap``-ped over a leading
+partition axis without recompilation:
+
+* ``Buffers`` gains a leading ``K`` axis — stacked per-partition ring
+  buffers;
+* every partition carries its **own plan array** and its own
+  ``born_lo/born_hi`` migration window, so partitions replan and migrate
+  independently while sharing the single compiled ``process_chunk``;
+* statistics (``FleetEstimator``) and invariant monitors
+  (one ``DecisionPolicy`` per partition, ``FleetRunner``) live on the
+  host, exactly as in the single-stream loop — the control plane stays
+  per-partition, the data plane is one XLA program.
+
+This is the §2.2 cheap-deployment property at fleet scale: deploying a new
+plan for partition ``p`` writes one row of the stacked plan matrix.
+
+Differential guarantee: ``FleetEngine`` must return bit-identical match
+counts to a Python loop of K single-partition engines and to the
+brute-force oracle (``ref_engine``); see ``tests/test_fleet.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .decision import DecisionPolicy
+from .engine import (Buffers, Chunk, EngineConfig, OrderEngine, StepResult,
+                     TreeEngine, tree_plan_to_slots)
+from .patterns import Pattern
+from .plans import OrderPlan, TreePlan
+from .stats import Stat, sample_selectivities
+
+_NEG_INF = -3.0e38
+_POS_INF = 3.0e38
+
+
+# ---------------------------------------------------------------------------
+# Chunk routing / stacking
+# ---------------------------------------------------------------------------
+
+
+class FleetChunk(NamedTuple):
+    """A stacked chunk: every field carries a leading partition axis."""
+
+    chunk: Chunk          # (K, cap) / (K, cap, A) fields
+    t0: float
+    t1: float
+    dropped: int = 0      # events dropped by per-partition capacity
+
+
+def stack_chunks(chunks: Sequence[Chunk]) -> Chunk:
+    """Stack K equally-shaped chunks along a new leading partition axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *chunks)
+
+
+def route_events(
+    type_id: np.ndarray,
+    ts: np.ndarray,
+    attr: np.ndarray,
+    keys: np.ndarray,
+    k: int,
+    cap: int,
+) -> Tuple[Chunk, int]:
+    """Scatter one keyed event stream into K per-partition padded chunks.
+
+    ``keys`` are arbitrary integer routing keys (tenant/symbol ids); events
+    land in partition ``key % k``.  Per-partition overflow beyond ``cap``
+    is dropped and counted (the serving layer surfaces it as back-pressure).
+    Events within a partition keep their stream order.
+    """
+    n_attrs = attr.shape[1]
+    out_tid = np.full((k, cap), -1, np.int32)
+    out_ts = np.zeros((k, cap), np.float32)
+    out_attr = np.zeros((k, cap, n_attrs), np.float32)
+    out_valid = np.zeros((k, cap), bool)
+    part = np.asarray(keys) % k
+    dropped = 0
+    for p in range(k):
+        idx = np.nonzero(part == p)[0]
+        m = len(idx)
+        if m > cap:
+            dropped += m - cap
+            idx = idx[:cap]
+            m = cap
+        out_tid[p, :m] = type_id[idx]
+        out_ts[p, :m] = ts[idx]
+        out_attr[p, :m] = attr[idx]
+        out_valid[p, :m] = True
+    chunk = Chunk(jnp.asarray(out_tid), jnp.asarray(out_ts),
+                  jnp.asarray(out_attr), jnp.asarray(out_valid))
+    return chunk, dropped
+
+
+def stacked_streams(streams: Sequence[Iterable]) -> Iterable[FleetChunk]:
+    """Zip K ``ChunkRecord`` streams (shared chunk clock) into FleetChunks.
+
+    All streams must tick with the same ``(t0, t1]`` edges (true for
+    ``data.cep_streams`` generators built from one ``StreamConfig``).
+    """
+    for recs in zip(*streams):
+        t0s = {r.t0 for r in recs}
+        t1s = {r.t1 for r in recs}
+        if len(t0s) != 1 or len(t1s) != 1:
+            raise ValueError("partition streams disagree on chunk edges")
+        yield FleetChunk(stack_chunks([r.chunk for r in recs]),
+                         recs[0].t0, recs[0].t1)
+
+
+# ---------------------------------------------------------------------------
+# Fleet engine (vmapped data plane)
+# ---------------------------------------------------------------------------
+
+
+class FleetEngine:
+    """K partitions through one ``jit(vmap(process))`` of the base engine.
+
+    ``kind`` selects the plan family ("order" | "tree"); plans may differ
+    per partition (they are stacked plan arrays), the pattern and engine
+    capacities are shared — that is what makes the single compiled program
+    possible.
+    """
+
+    def __init__(self, kind: str, pattern: Pattern, k: int,
+                 cfg: EngineConfig = EngineConfig()):
+        if kind == "order":
+            self.base = OrderEngine(pattern, cfg)
+        elif kind == "tree":
+            self.base = TreeEngine(pattern, cfg)
+        else:
+            raise ValueError(f"unknown engine kind {kind!r}")
+        self.kind = kind
+        self.pattern = pattern
+        self.cfg = cfg
+        self.k = int(k)
+        self._process = jax.jit(jax.vmap(self.base.process_fn))
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self) -> Buffers:
+        one = self.base.init_state()
+        return jax.tree.map(
+            lambda x: jnp.tile(x[None], (self.k,) + (1,) * x.ndim), one)
+
+    # -- plan stacking -----------------------------------------------------
+
+    def plan_row(self, plan) -> np.ndarray:
+        """A single plan as its row of the stacked plan matrix."""
+        if self.kind == "order":
+            return np.asarray(plan.order, np.int32)
+        return tree_plan_to_slots(plan)
+
+    def plans_to_array(self, plans) -> jnp.ndarray:
+        """One plan (broadcast) or a length-K sequence -> stacked array."""
+        if isinstance(plans, (OrderPlan, TreePlan)):
+            plans = [plans] * self.k
+        if len(plans) != self.k:
+            raise ValueError(f"expected {self.k} plans, got {len(plans)}")
+        return jnp.asarray(np.stack([self.plan_row(p) for p in plans]))
+
+    # -- execution ---------------------------------------------------------
+
+    def _bcast(self, v, dtype=jnp.float32) -> jnp.ndarray:
+        arr = jnp.asarray(v, dtype)
+        if arr.ndim == 0:
+            arr = jnp.broadcast_to(arr, (self.k,))
+        return arr
+
+    def process_chunk(self, state: Buffers, chunks: Chunk, plans,
+                      t0, t1, born_lo=_NEG_INF, born_hi=_POS_INF
+                      ) -> Tuple[Buffers, StepResult]:
+        """One chunk tick for the whole fleet.
+
+        ``chunks`` fields carry a leading K axis; ``t0/t1/born_*`` may be
+        scalars (shared clock) or per-partition ``(K,)`` vectors.  Returns
+        the stacked state and a ``StepResult`` of ``(K,)`` counters.
+        """
+        plan_arr = (jnp.asarray(plans)
+                    if isinstance(plans, (np.ndarray, jnp.ndarray))
+                    else self.plans_to_array(plans))
+        return self._process(
+            state, chunks, plan_arr,
+            self._bcast(t0), self._bcast(t1),
+            self._bcast(born_lo), self._bcast(born_hi))
+
+
+# ---------------------------------------------------------------------------
+# Per-partition statistics
+# ---------------------------------------------------------------------------
+
+
+class FleetEstimator:
+    """Vectorized per-partition sliding-window estimator.
+
+    The single-stream ``SlidingWindowEstimator`` keeps ring arrays of shape
+    ``(buckets, n)``; the fleet version prepends the partition axis so one
+    numpy update serves all K partitions.  Snapshots are per-partition
+    ``Stat`` views, which the planners and invariant monitors consume
+    unchanged.
+    """
+
+    def __init__(self, k: int, n: int, num_buckets: int = 16,
+                 laplace: float = 1.0):
+        self.k, self.n = k, n
+        self.num_buckets = num_buckets
+        self.laplace = float(laplace)
+        self._counts = np.zeros((k, num_buckets, n), np.float64)
+        self._durations = np.zeros((k, num_buckets), np.float64)
+        self._sel_trials = np.zeros((k, num_buckets, n, n), np.float64)
+        self._sel_hits = np.zeros((k, num_buckets, n, n), np.float64)
+        self._head = 0
+        self._filled = 0
+
+    def update(self, counts: np.ndarray, duration: float,
+               sel_trials: Optional[np.ndarray] = None,
+               sel_hits: Optional[np.ndarray] = None) -> None:
+        """Push one chunk of per-partition observations ((K, n) counts)."""
+        h = self._head
+        self._counts[:, h] = counts
+        self._durations[:, h] = max(float(duration), 1e-9)
+        self._sel_trials[:, h] = 0.0 if sel_trials is None else sel_trials
+        self._sel_hits[:, h] = 0.0 if sel_hits is None else sel_hits
+        self._head = (h + 1) % self.num_buckets
+        self._filled = min(self._filled + 1, self.num_buckets)
+
+    def snapshot(self, p: int) -> Stat:
+        total_t = self._durations[p].sum() if self._filled else 1.0
+        rates = self._counts[p].sum(axis=0) / max(total_t, 1e-9)
+        trials = self._sel_trials[p].sum(axis=0)
+        hits = self._sel_hits[p].sum(axis=0)
+        lp = self.laplace
+        sel = (hits + lp) / (trials + 2.0 * lp)
+        sel = np.where(trials > 0, sel, 1.0)
+        return Stat(rates, sel)
+
+    def snapshots(self) -> List[Stat]:
+        return [self.snapshot(p) for p in range(self.k)]
+
+
+# ---------------------------------------------------------------------------
+# Fleet adaptation loop (per-partition control plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    """Aggregated fleet counters plus the per-partition breakdown."""
+
+    chunks: int = 0
+    events: int = 0
+    full_matches: int = 0
+    pm_created: int = 0
+    overflow: int = 0
+    closure_expansions: int = 0
+    neg_rejected: int = 0
+    replans: int = 0
+    deployments: int = 0
+    escalations: int = 0
+    migration_partition_chunks: int = 0
+    engine_time_s: float = 0.0
+    control_time_s: float = 0.0
+    per_partition_matches: Optional[np.ndarray] = None
+    per_partition_deployments: Optional[np.ndarray] = None
+
+
+class FleetRunner:
+    """Algorithm 1 replicated per partition over one vmapped data plane.
+
+    Each partition owns its statistics window, its decision policy
+    (invariant monitor), its current/old plan rows and its [36] migration
+    split; every chunk tick runs ONE compiled fleet call (two while any
+    partition is migrating — the doubled pass is the fleet-level deployment
+    cost, charged only when at least one partition is mid-migration).
+    """
+
+    def __init__(
+        self,
+        pattern: Pattern,
+        k: int,
+        planner=None,
+        policy_factory=None,
+        engine_cfg: EngineConfig = EngineConfig(),
+        estimator_buckets: int = 16,
+        sel_samples: int = 64,
+        escalate_on_overflow: bool = True,
+        max_escalations: int = 4,
+        seed: int = 0,
+    ):
+        from .adaptation import make_planner
+
+        self.pattern = pattern
+        self.k = int(k)
+        planner = planner or "greedy"
+        self.planner_kind = planner
+        self.planner = make_planner(planner)
+        kind = "order" if planner == "greedy" else "tree"
+        self.engine_cfg = engine_cfg
+        self.fleet = FleetEngine(kind, pattern, k, engine_cfg)
+        # Overflow escalation mirrors AdaptiveRunner: a truncated join may
+        # have dropped matches, so the chunk is re-evaluated with the next
+        # pow2 match-set capacity (shared by the whole fleet — the stacked
+        # plane has one m_cap).  Escalated engines are cached and persist.
+        self.escalate_on_overflow = escalate_on_overflow
+        self.max_escalations = max_escalations
+        self._fleets = {engine_cfg.m_cap: self.fleet}
+        self._active_fleet = self.fleet
+        self.estimator = FleetEstimator(
+            k, pattern.n, num_buckets=estimator_buckets)
+        self.policies: List[Optional[DecisionPolicy]] = [
+            policy_factory() if policy_factory else None for _ in range(k)]
+        self.sel_samples = sel_samples
+        self._rng = np.random.default_rng(seed)
+        self._pred_tensors = pattern.pred_tensors()
+        self._pos_of_type = {t: p for p, t in enumerate(pattern.type_ids)}
+        # Per-partition control state.
+        self.cur_plans: List[Optional[object]] = [None] * k
+        self.old_plans: List[Optional[object]] = [None] * k
+        self._replan_t = np.full(k, _NEG_INF, np.float64)
+        self._migration_until = np.full(k, _NEG_INF, np.float64)
+        self._cur_rows: Optional[np.ndarray] = None
+        self._old_rows: Optional[np.ndarray] = None
+
+    # -- statistics --------------------------------------------------------
+
+    def _observe(self, fc: FleetChunk) -> None:
+        chunk = fc.chunk
+        tid_all = np.asarray(chunk.type_id)
+        attr_all = np.asarray(chunk.attr)
+        valid_all = np.asarray(chunk.valid)
+        n = self.pattern.n
+        counts = np.zeros((self.k, n))
+        trials = np.zeros((self.k, n, n))
+        hits = np.zeros((self.k, n, n))
+        for p in range(self.k):
+            v = valid_all[p]
+            tid = tid_all[p][v]
+            attrs = attr_all[p][v]
+            for pos, t in enumerate(self.pattern.type_ids):
+                counts[p, pos] = float((tid == t).sum())
+            trials[p], hits[p] = sample_selectivities(
+                self._rng, tid, attrs, self._pred_tensors,
+                self._pos_of_type, n, self.sel_samples)
+        self.estimator.update(counts, fc.t1 - fc.t0, trials, hits)
+
+    # -- plan bookkeeping --------------------------------------------------
+
+    def _plan_row(self, plan) -> np.ndarray:
+        return self.fleet.plan_row(plan)
+
+    def _escalated_fleet(self) -> FleetEngine:
+        cap = self._active_fleet.cfg.m_cap * 2
+        if cap not in self._fleets:
+            self._fleets[cap] = FleetEngine(
+                self.fleet.kind, self.pattern, self.k,
+                EngineConfig(b_cap=self.engine_cfg.b_cap, m_cap=cap,
+                             backend=self.engine_cfg.backend))
+        return self._fleets[cap]
+
+    def _replan_partition(self, p: int, stat: Stat, t0: float,
+                          m: FleetMetrics) -> None:
+        policy = self.policies[p]
+        if self.cur_plans[p] is None:
+            plan, dcs = self.planner(self.pattern, stat)
+            self.cur_plans[p] = plan
+            self._cur_rows[p] = self._plan_row(plan)
+            self._old_rows[p] = self._cur_rows[p]
+            if policy is not None:
+                policy.on_replan(plan, dcs, stat)
+            return
+        if policy is None or not policy.decide(stat):
+            return
+        new_plan, dcs = self.planner(self.pattern, stat)
+        m.replans += 1
+        if new_plan != self.cur_plans[p]:
+            # Deploy with the [36] migration split: the old plan row keeps
+            # serving matches born before t0, the new row everything after.
+            self.old_plans[p] = self.cur_plans[p]
+            self._old_rows[p] = self._cur_rows[p]
+            self.cur_plans[p] = new_plan
+            self._cur_rows[p] = self._plan_row(new_plan)
+            self._replan_t[p] = t0
+            self._migration_until[p] = t0 + self.pattern.window
+            m.deployments += 1
+            m.per_partition_deployments[p] += 1
+        policy.on_replan(self.cur_plans[p], dcs, stat)
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+        m = FleetMetrics(
+            per_partition_matches=np.zeros(self.k, np.int64),
+            per_partition_deployments=np.zeros(self.k, np.int64))
+        state = self.fleet.init_state()
+        if self._cur_rows is None:
+            probe = self._plan_row(
+                self.planner(self.pattern,
+                             self.estimator.snapshot(0))[0])
+            self._cur_rows = np.tile(probe, (self.k,) + (1,) * probe.ndim)
+            self._old_rows = self._cur_rows.copy()
+            self.cur_plans = [None] * self.k  # real plans set per partition
+
+        for fc in fleet_stream:
+            t_ctl = time.perf_counter()
+            self._observe(fc)
+            for p in range(self.k):
+                self._replan_partition(
+                    p, self.estimator.snapshot(p), fc.t0, m)
+            # Partitions whose migration window lapsed fold back to one row.
+            lapsed = (self._replan_t > _NEG_INF) & \
+                (fc.t0 >= self._migration_until)
+            for p in np.nonzero(lapsed)[0]:
+                self.old_plans[p] = None
+                self._old_rows[p] = self._cur_rows[p]
+                self._replan_t[p] = _NEG_INF
+            migrating = self._replan_t > _NEG_INF
+            m.control_time_s += time.perf_counter() - t_ctl
+
+            t_eng = time.perf_counter()
+
+            def passes(chunk, state):
+                # Pass A: current plans ingest the chunk; completed
+                # matches are restricted to those born at/after each
+                # partition's replan time (no restriction at -inf).
+                state, res = self._active_fleet.process_chunk(
+                    state, chunk, jnp.asarray(self._cur_rows),
+                    fc.t0, fc.t1,
+                    born_lo=self._replan_t.astype(np.float32),
+                    born_hi=_POS_INF)
+                out = [np.asarray(x, np.int64)
+                       for x in (res.full_matches, res.pm_created,
+                                 res.overflow, res.closure_expansions,
+                                 res.neg_rejected)]
+                if migrating.any():
+                    # Pass B: old plans over an empty chunk (events
+                    # already ingested) pick up matches born before the
+                    # replan.  Non-migrating partitions have an empty
+                    # born-window (born_hi = -inf) and contribute zero.
+                    empty = chunk._replace(
+                        valid=jnp.zeros_like(chunk.valid))
+                    state, res_b = self._active_fleet.process_chunk(
+                        state, empty, jnp.asarray(self._old_rows),
+                        fc.t0, fc.t1,
+                        born_lo=_NEG_INF,
+                        born_hi=self._replan_t.astype(np.float32))
+                    # Non-migrating partitions ran pass B with old_rows ==
+                    # cur_rows and an empty born-window: their match
+                    # counters are zero by construction, but pm/overflow
+                    # measure join work regardless of the born filter —
+                    # mask them so fleet counters aren't double-charged.
+                    for i, x in enumerate(
+                            (res_b.full_matches, res_b.pm_created,
+                             res_b.overflow, res_b.closure_expansions,
+                             res_b.neg_rejected)):
+                        out[i] += np.where(migrating,
+                                           np.asarray(x, np.int64), 0)
+                return state, out
+
+            state, (full, pm, ov, cl, ng) = passes(fc.chunk, state)
+            # Overflow recovery: a truncated join may have dropped
+            # matches, so re-evaluate the window at the next pow2 capacity
+            # (events already ingested; the recount replaces the truncated
+            # one and the duplicate join work is charged to pm).
+            tries = 0
+            while (ov.sum() > 0 and self.escalate_on_overflow
+                   and tries < self.max_escalations):
+                self._active_fleet = self._escalated_fleet()
+                m.escalations += 1
+                tries += 1
+                empty = fc.chunk._replace(
+                    valid=jnp.zeros_like(fc.chunk.valid))
+                pm_so_far = pm
+                state, (full, pm, ov, cl, ng) = passes(empty, state)
+                pm = pm + pm_so_far
+            if migrating.any():
+                m.migration_partition_chunks += int(migrating.sum())
+            m.engine_time_s += time.perf_counter() - t_eng
+
+            m.chunks += 1
+            m.events += int(np.asarray(fc.chunk.valid).sum())
+            m.full_matches += int(full.sum())
+            m.pm_created += int(pm.sum())
+            m.overflow += int(ov.sum())
+            m.closure_expansions += int(cl.sum())
+            m.neg_rejected += int(ng.sum())
+            m.per_partition_matches += full
+        return m

@@ -92,6 +92,8 @@ class Pattern:
                                             # negated_pos); 0 = before all,
                                             # n = after all
     kleene_pos: Optional[int] = None        # pattern position under closure
+    kleene_bound: Optional[int] = None      # max counted closure expansions
+                                            # per match; None = unbounded
     name: str = "pattern"
 
     @property
@@ -194,10 +196,12 @@ def kleene_pattern(
     kleene_pos: int,
     predicates: Sequence[Predicate] = (),
     n_attrs: int = 1,
+    kleene_bound: Optional[int] = None,
     name: str = "kleene",
 ) -> Pattern:
     return Pattern(Operator.KLEENE, tuple(type_ids), float(window),
-                   tuple(predicates), n_attrs, kleene_pos=kleene_pos, name=name)
+                   tuple(predicates), n_attrs, kleene_pos=kleene_pos,
+                   kleene_bound=kleene_bound, name=name)
 
 
 def chain_predicates(

@@ -1,4 +1,5 @@
-"""Serving substrate: prefill/decode engine + adaptive batch scheduler."""
+"""Serving substrate: prefill/decode engine, adaptive batch scheduler, and
+the keyed-stream router for the partitioned CEP fleet."""
 
-from .engine import ServingEngine  # noqa: F401
-from .scheduler import Request, Scheduler  # noqa: F401
+from .engine import CEPFleetServingEngine, ServingEngine  # noqa: F401
+from .scheduler import CEPStreamRouter, Request, Scheduler  # noqa: F401

@@ -1,11 +1,18 @@
-"""Batched serving engine: prefill + decode with a unified cache.
+"""Batched serving engines: LM prefill/decode and the CEP fleet front.
 
-Wraps ``Model.prefill`` / ``Model.decode_step`` into jitted entry points
-with a fixed batch capacity.  Requests occupy batch *slots*; finished slots
-are refilled by the scheduler without recompiling (slot state is data).
-Per-request cache write indices support heterogeneous positions in one
-batch — the decode step is one compiled program regardless of the request
-mix, mirroring the CEP engine's plans-are-data design.
+``ServingEngine`` wraps ``Model.prefill`` / ``Model.decode_step`` into
+jitted entry points with a fixed batch capacity.  Requests occupy batch
+*slots*; finished slots are refilled by the scheduler without recompiling
+(slot state is data).  Per-request cache write indices support
+heterogeneous positions in one batch — the decode step is one compiled
+program regardless of the request mix, mirroring the CEP engine's
+plans-are-data design.
+
+``CEPFleetServingEngine`` is the same idea for event streams: K stream
+partitions occupy fleet *rows*; a keyed event batch is routed by
+``key % K`` into stacked per-partition chunks and the whole fleet advances
+with ONE compiled vmapped ``process_chunk``.  Deploying a new plan for a
+partition writes one row of the stacked plan matrix — never a recompile.
 """
 
 from __future__ import annotations
@@ -17,6 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine import EngineConfig
+from ..core.fleet import FleetEngine, route_events
+from ..core.patterns import Pattern
 from ..models.config import ModelConfig
 from ..models.model import Cache, Model
 
@@ -79,3 +89,56 @@ class ServingEngine:
     def reset_slot(self, slot: int) -> None:
         self.cache = self.cache._replace(
             index=self.cache.index.at[slot].set(0))
+
+
+class CEPFleetServingEngine:
+    """Serving front for the partitioned CEP fleet.
+
+    Owns the stacked ring-buffer state and the per-partition plan rows;
+    ``process_batch`` takes one keyed event batch covering the time slice
+    ``(t0, t1]``, routes it to partitions and advances all K partitions in
+    one compiled call.  Per-partition cumulative match counts and
+    capacity-drop back-pressure are exposed for the scheduler.
+    """
+
+    def __init__(self, pattern: Pattern, k: int, plans,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 kind: str = "order", chunk_cap: int = 512):
+        self.fleet = FleetEngine(kind, pattern, k, engine_cfg)
+        self.k = k
+        self.chunk_cap = chunk_cap
+        self.state = self.fleet.init_state()
+        # Host-owned copy: plan rows must stay writable for deploy_plan
+        # (np.asarray of a jax array is a read-only view).
+        self._rows = np.array(self.fleet.plans_to_array(plans))
+        self.matches = np.zeros(k, np.int64)
+        self.neg_rejected = np.zeros(k, np.int64)
+        self.closure_expansions = np.zeros(k, np.int64)
+        self.overflow = np.zeros(k, np.int64)
+        self.dropped = 0
+
+    def deploy_plan(self, partition: int, plan) -> None:
+        """Cheap deployment (§2.2): rewrite one stacked plan row."""
+        self._rows[partition] = self.fleet.plan_row(plan)
+
+    def process_batch(self, type_id, ts, attr, keys,
+                      t0: float, t1: float) -> np.ndarray:
+        """Route one keyed event batch and tick the fleet once.
+
+        Returns the per-partition full-match counts for this slice.
+        """
+        chunk, dropped = route_events(
+            np.asarray(type_id), np.asarray(ts), np.asarray(attr),
+            np.asarray(keys), self.k, self.chunk_cap)
+        self.dropped += dropped
+        self.state, res = self.fleet.process_chunk(
+            self.state, chunk, self._rows, t0, t1)
+        full = np.asarray(res.full_matches, np.int64)
+        self.matches += full
+        self.neg_rejected += np.asarray(res.neg_rejected, np.int64)
+        self.closure_expansions += np.asarray(
+            res.closure_expansions, np.int64)
+        # Match-set truncation undercounts matches; surface it per
+        # partition so undercounting is never silent.
+        self.overflow += np.asarray(res.overflow, np.int64)
+        return full

@@ -18,7 +18,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..adaptive.batching import AdaptiveBatchPlanner
-from .engine import ServingEngine
+from .engine import CEPFleetServingEngine, ServingEngine
 
 
 @dataclasses.dataclass
@@ -99,3 +99,68 @@ class Scheduler:
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
+
+
+class CEPStreamRouter:
+    """Time-sliced router feeding keyed events into the CEP fleet.
+
+    Producers ``submit`` events tagged with an integer routing key (tenant
+    / symbol id); each ``tick`` closes the current time slice ``(t0, t1]``,
+    routes the buffered events to their partitions (``key % K``) and
+    advances the whole fleet with one compiled call.  Events with
+    timestamps past the current slice stay queued for later ticks, so an
+    out-of-order producer is tolerated as long as the event arrives before
+    its own slice closes.  Events submitted *after* their slice closed
+    (``ts <= t0``) can never be counted exactly-once by the engine's
+    latest-event rule, so they are dropped and surfaced in
+    ``late_dropped`` rather than silently routed into a slice that will
+    ignore the matches they complete.
+    """
+
+    def __init__(self, engine: CEPFleetServingEngine,
+                 slice_duration: float = 1.0, t_start: float = 0.0):
+        self.engine = engine
+        self.slice_duration = float(slice_duration)
+        self.t0 = float(t_start)
+        self._tid: List[int] = []
+        self._ts: List[float] = []
+        self._attr: List[np.ndarray] = []
+        self._keys: List[int] = []
+        self.slices = 0
+        self.late_dropped = 0
+
+    def submit(self, key: int, type_id: int, ts: float,
+               attr: np.ndarray) -> None:
+        self._keys.append(int(key))
+        self._tid.append(int(type_id))
+        self._ts.append(float(ts))
+        self._attr.append(np.asarray(attr, np.float32))
+
+    @property
+    def pending(self) -> int:
+        return len(self._ts)
+
+    def tick(self) -> np.ndarray:
+        """Close one slice; returns per-partition match counts for it."""
+        t1 = self.t0 + self.slice_duration
+        ts = np.asarray(self._ts, np.float32)
+        late = ts <= self.t0
+        self.late_dropped += int(late.sum())
+        take = (ts > self.t0) & (ts <= t1)
+        idx = np.nonzero(take)[0]
+        keep = np.nonzero(~take & ~late)[0]
+        tid = np.asarray(self._tid, np.int32)[idx]
+        n_attrs = self.engine.fleet.pattern.n_attrs
+        attr = (np.stack([self._attr[i] for i in idx])
+                if len(idx) else np.zeros((0, n_attrs), np.float32))
+        keys = np.asarray(self._keys, np.int64)[idx] if len(idx) \
+            else np.zeros(0, np.int64)
+        full = self.engine.process_batch(
+            tid, ts[idx], attr, keys, self.t0, t1)
+        self._tid = [self._tid[i] for i in keep]
+        self._ts = [self._ts[i] for i in keep]
+        self._attr = [self._attr[i] for i in keep]
+        self._keys = [self._keys[i] for i in keep]
+        self.t0 = t1
+        self.slices += 1
+        return full

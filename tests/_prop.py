@@ -1,0 +1,93 @@
+"""Property-testing shim: hypothesis when available, seeded sweeps otherwise.
+
+The tier-1 container does not ship ``hypothesis``.  Tests import ``given``,
+``settings`` and ``st`` from this module instead of from ``hypothesis``;
+when the real library is importable we re-export it unchanged, otherwise a
+minimal drop-in runs each test over a deterministic seeded-random example
+sweep.  Only the strategy surface the suite actually uses is implemented
+(``st.integers`` and ``st.floats`` with inclusive bounds).
+
+Fallback semantics mirror the hypothesis behaviours the tests rely on:
+
+* ``@given`` accepts keyword strategies, or positional strategies that are
+  right-aligned against the test function's parameters (leftover leading
+  parameters stay visible to pytest as fixtures/parametrize arguments);
+* ``@settings(max_examples=..., deadline=...)`` bounds the sweep size;
+* examples are derived from a per-test deterministic seed, so failures are
+  reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            kw = dict(kw_strategies)
+            if pos_strategies:
+                # hypothesis right-aligns positional strategies.
+                for name, strat in zip(names[-len(pos_strategies):],
+                                       pos_strategies):
+                    kw[name] = strat
+            fixture_names = [n for n in names if n not in kw]
+            seed0 = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                import numpy as np
+
+                # @settings sits above @given, so it stamps the wrapper.
+                n_examples = min(
+                    getattr(wrapper, "_prop_max_examples",
+                            _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES)
+                for i in range(n_examples):
+                    rng = np.random.default_rng(seed0 + i)
+                    drawn = {k: s.sample(rng) for k, s in kw.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the generated parameters from pytest's fixture resolver.
+            wrapper.__signature__ = sig.replace(parameters=[
+                sig.parameters[n] for n in fixture_names])
+            return wrapper
+        return deco

@@ -63,6 +63,7 @@ def test_migration_no_duplicate_detection():
     assert mu.migration_chunks > 0
 
 
+@pytest.mark.slow
 def test_zstream_loop_runs():
     m = run("invariant", kind="traffic", planner="zstream", d=0.1)
     assert m.chunks == SCFG.n_chunks

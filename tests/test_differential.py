@@ -1,0 +1,130 @@
+"""Differential tests: compiled engines vs the brute-force oracle.
+
+Randomized streams sweep pattern size, window length, negation, the Kleene
+bound, and chunk boundaries; `ref_engine` is ground truth.  A match must be
+counted exactly once — in the chunk of its latest event."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.core.engine import Chunk, EngineConfig, OrderEngine, TreeEngine
+from repro.core.patterns import (
+    PRED_GT, PRED_LT, Predicate, and_pattern, chain_predicates,
+    kleene_pattern, neg_pattern, seq_pattern,
+)
+from repro.core.plans import OrderPlan, TreeNode, TreePlan
+from repro.core.ref_engine import RefEngine, brute_force_matches
+
+
+def gen_stream(rng, n_types, n_events, n_attrs=1, t_end=100.0):
+    ts = np.sort(rng.uniform(0, t_end, n_events)).astype(np.float32)
+    tid = rng.integers(0, n_types, n_events).astype(np.int32)
+    attr = rng.normal(size=(n_events, n_attrs)).astype(np.float32)
+    return tid, ts, attr
+
+
+def as_chunk(tid, ts, attr):
+    return Chunk(jnp.asarray(tid), jnp.asarray(ts), jnp.asarray(attr),
+                 jnp.ones(len(ts), bool))
+
+
+def left_deep_tree(n):
+    node = TreeNode(leaf=0)
+    for p in range(1, n):
+        node = TreeNode(left=node, right=TreeNode(leaf=p))
+    return TreePlan(node)
+
+
+@pytest.mark.parametrize("n,window", [(2, 5.0), (3, 12.0), (4, 30.0)])
+def test_order_engine_size_window_sweep(n, window, rng):
+    pat = seq_pattern(list(range(n)), window,
+                      chain_predicates(list(range(n)), theta=0.4))
+    tid, ts, attr = gen_stream(rng, n, 15 * n)
+    eng = OrderEngine(pat, EngineConfig(b_cap=128, m_cap=4096))
+    plan = OrderPlan(tuple(reversed(range(n))))
+    _, res = eng.process_chunk(eng.init_state(), as_chunk(tid, ts, attr),
+                               plan, 0.0, 200.0)
+    ref = brute_force_matches(pat, tid, ts, attr, 0.0, 200.0)
+    assert int(res.full_matches) == ref.full_matches
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_tree_engine_size_sweep(n, rng):
+    pat = seq_pattern(list(range(n)), 20.0,
+                      chain_predicates(list(range(n)), theta=0.2))
+    tid, ts, attr = gen_stream(rng, n, 12 * n)
+    eng = TreeEngine(pat, EngineConfig(b_cap=128, m_cap=4096))
+    _, res = eng.process_chunk(eng.init_state(), as_chunk(tid, ts, attr),
+                               left_deep_tree(n), 0.0, 200.0)
+    ref = brute_force_matches(pat, tid, ts, attr, 0.0, 200.0)
+    assert int(res.full_matches) == ref.full_matches
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), n_chunks=st.integers(2, 5))
+def test_chunk_boundaries_exactly_once(seed, n_chunks):
+    """Chunked totals must equal the single-shot oracle regardless of how
+    the timeline is cut — each match lands in its latest event's chunk."""
+    rng = np.random.default_rng(seed)
+    pat = seq_pattern([0, 1, 2], 15.0,
+                      chain_predicates([0, 1, 2], theta=0.8))
+    tid, ts, attr = gen_stream(rng, 3, 48)
+    eng = OrderEngine(pat, EngineConfig(b_cap=256, m_cap=4096))
+    state = eng.init_state()
+    ref = RefEngine(pat)
+    edges = np.concatenate(
+        [[0.0], np.sort(rng.uniform(0, 100, n_chunks - 1)), [100.0]])
+    total = ref_total = 0
+    for t0, t1 in zip(edges[:-1], edges[1:]):
+        m = (ts > t0) & (ts <= t1)
+        state, res = eng.process_chunk(
+            state, as_chunk(tid[m], ts[m], attr[m]), OrderPlan((2, 1, 0)),
+            t0, t1)
+        total += int(res.full_matches)
+        ref_total += ref.process_chunk(tid[m], ts[m], attr[m],
+                                       t0, t1).full_matches
+    want = brute_force_matches(pat, tid, ts, attr, 0.0, 100.0).full_matches
+    assert total == want
+    assert ref_total == want
+
+
+@pytest.mark.parametrize("negated_pos", [0, 1, 2])
+def test_negation_positions(negated_pos, rng):
+    pat = neg_pattern(
+        [0, 1], 20.0, negated_type=2, negated_pos=negated_pos,
+        predicates=(Predicate(0, 1, PRED_LT, 0, 0, 0.5),),
+        negated_predicates=(Predicate(2, 0, PRED_GT, 0, 0, 1.0),))
+    tid, ts, attr = gen_stream(rng, 3, 60)
+    eng = OrderEngine(pat, EngineConfig(b_cap=64, m_cap=1024))
+    _, res = eng.process_chunk(eng.init_state(), as_chunk(tid, ts, attr),
+                               OrderPlan((1, 0)), 0.0, 200.0)
+    ref = brute_force_matches(pat, tid, ts, attr, 0.0, 200.0)
+    assert int(res.full_matches) == ref.full_matches
+    assert int(res.neg_rejected) == ref.neg_rejected
+
+
+@pytest.mark.parametrize("bound", [None, 0, 1, 3])
+def test_kleene_bound_sweep(bound, rng):
+    pat = kleene_pattern([0, 1, 2], 25.0, kleene_pos=1,
+                         predicates=chain_predicates([0, 1, 2], theta=0.9),
+                         kleene_bound=bound)
+    tid, ts, attr = gen_stream(rng, 3, 45)
+    eng = OrderEngine(pat, EngineConfig(b_cap=64, m_cap=2048))
+    _, res = eng.process_chunk(eng.init_state(), as_chunk(tid, ts, attr),
+                               OrderPlan((0, 1, 2)), 0.0, 200.0)
+    ref = brute_force_matches(pat, tid, ts, attr, 0.0, 200.0)
+    assert int(res.full_matches) == ref.full_matches
+    assert int(res.closure_expansions) == ref.closure_expansions
+
+
+def test_and_pattern_vs_oracle(rng):
+    pat = and_pattern([0, 1, 2], 18.0,
+                      chain_predicates([0, 1, 2], theta=0.3))
+    tid, ts, attr = gen_stream(rng, 3, 50)
+    eng = OrderEngine(pat, EngineConfig(b_cap=64, m_cap=2048))
+    _, res = eng.process_chunk(eng.init_state(), as_chunk(tid, ts, attr),
+                               OrderPlan((1, 2, 0)), 0.0, 200.0)
+    assert int(res.full_matches) == brute_force_matches(
+        pat, tid, ts, attr, 0.0, 200.0).full_matches

@@ -1,7 +1,5 @@
-"""CEP engine vs a brute-force oracle over all operators and both plan
-families, plus chunked exactly-once counting."""
-
-import itertools
+"""CEP engine vs the brute-force oracle (``core.ref_engine``) over all
+operators and both plan families, plus chunked exactly-once counting."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +11,7 @@ from repro.core.patterns import (
     kleene_pattern, neg_pattern, seq_pattern,
 )
 from repro.core.plans import OrderPlan, TreeNode, TreePlan
+from repro.core.ref_engine import brute_force_matches
 
 
 def gen_stream(rng, n_types, n_events, n_attrs=1, t_end=100.0):
@@ -28,69 +27,7 @@ def as_chunk(tid, ts, attr):
 
 
 def brute_matches(pattern, tid, ts, attr, t0=-np.inf, t1=np.inf):
-    n = pattern.n
-    pt = pattern.pred_tensors()
-    idx_by_pos = [np.nonzero(tid == t)[0] for t in pattern.type_ids]
-    count = 0
-    for combo in itertools.product(*idx_by_pos):
-        tss = ts[list(combo)]
-        if tss.max() - tss.min() > pattern.window:
-            continue
-        if pattern.is_sequence and not all(
-                tss[i] < tss[i + 1] for i in range(n - 1)):
-            continue
-        ok = True
-        for p in range(n):
-            for q in range(n):
-                if p == q or pt["op"][p, q] == 0:
-                    continue
-                a = attr[combo[p], pt["a_attr"][p, q]]
-                b = attr[combo[q], pt["b_attr"][p, q]]
-                th = pt["theta"][p, q]
-                o = pt["op"][p, q]
-                r = (a < b + th if o == 1 else
-                     a > b - th if o == 2 else abs(a - b) <= th)
-                if not r:
-                    ok = False
-                    break
-            if not ok:
-                break
-        if not ok or not (t0 < tss.max() <= t1):
-            continue
-        if pattern.negated_type is not None:
-            npos = pattern.negated_pos
-            lo = tss[npos - 1] if npos and npos > 0 else -np.inf
-            hi = tss[npos] if npos is not None and npos < n else np.inf
-            vetoed = False
-            for j in np.nonzero(tid == pattern.negated_type)[0]:
-                if not (lo < ts[j] < hi):
-                    continue
-                if (max(tss.max(), ts[j]) - min(tss.min(), ts[j])
-                        > pattern.window):
-                    continue
-                okn = True
-                for pr in pattern.negated_predicates:
-                    if pr.a_type == pattern.negated_type:
-                        a = attr[j, pr.a_attr]
-                        b = attr[combo[list(pattern.type_ids).index(
-                            pr.b_type)], pr.b_attr]
-                    else:
-                        a = attr[combo[list(pattern.type_ids).index(
-                            pr.a_type)], pr.a_attr]
-                        b = attr[j, pr.b_attr]
-                    r = (a < b + pr.theta if pr.op == 1 else
-                         a > b - pr.theta if pr.op == 2 else
-                         abs(a - b) <= pr.theta)
-                    if not r:
-                        okn = False
-                        break
-                if okn:
-                    vetoed = True
-                    break
-            if vetoed:
-                continue
-        count += 1
-    return count
+    return brute_force_matches(pattern, tid, ts, attr, t0, t1).full_matches
 
 
 @pytest.mark.parametrize("order", [(0, 1, 2), (2, 1, 0), (1, 0, 2)])

@@ -1,0 +1,247 @@
+"""Fleet executor: bit-identical to a Python loop of K single-partition
+engines and to the brute-force oracle, for K in {1, 4, 16}."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decision import make_policy
+from repro.core.engine import Chunk, EngineConfig, OrderEngine, TreeEngine
+from repro.core.fleet import (FleetEngine, FleetRunner, route_events,
+                              stack_chunks, stacked_streams)
+from repro.core.patterns import (
+    PRED_ABS_LE, Predicate, and_pattern, chain_predicates, kleene_pattern,
+    neg_pattern, seq_pattern,
+)
+from repro.core.plans import OrderPlan, TreeNode, TreePlan
+from repro.core.ref_engine import RefEngine, brute_force_matches
+from repro.data.cep_streams import StreamConfig, make_stream
+
+CFG = EngineConfig(b_cap=64, m_cap=1024)
+
+
+def gen_partition_streams(rng, k, n_types, n_events):
+    out = []
+    for _ in range(k):
+        ts = np.sort(rng.uniform(0, 100, n_events)).astype(np.float32)
+        tid = rng.integers(0, n_types, n_events).astype(np.int32)
+        attr = rng.normal(size=(n_events, 1)).astype(np.float32)
+        out.append((tid, ts, attr))
+    return out
+
+
+def as_chunk(tid, ts, attr):
+    return Chunk(jnp.asarray(tid), jnp.asarray(ts), jnp.asarray(attr),
+                 jnp.ones(len(ts), bool))
+
+
+def fleet_patterns():
+    return [
+        seq_pattern([0, 1, 2], 20.0, chain_predicates([0, 1, 2],
+                                                      theta=0.4)),
+        and_pattern([0, 1, 2], 15.0, chain_predicates([0, 1, 2],
+                                                      theta=0.3)),
+        neg_pattern([0, 1], 20.0, negated_type=2, negated_pos=1,
+                    negated_predicates=(
+                        Predicate(2, 0, PRED_ABS_LE, 0, 0, 1.5),)),
+        kleene_pattern([0, 1, 2], 20.0, kleene_pos=1, kleene_bound=2),
+    ]
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+@pytest.mark.parametrize("pat_i", [0, 1, 2, 3])
+def test_fleet_equals_loop_and_oracle(k, pat_i, rng):
+    """The acceptance triangle: fleet == python loop == brute force."""
+    pat = fleet_patterns()[pat_i]
+    streams = gen_partition_streams(rng, k, 3, 40)
+    # Heterogeneous per-partition plans: plans are data, one compiled plane.
+    orders = [(0, 1, 2), (2, 1, 0), (1, 0, 2), (2, 0, 1)]
+    plans = [OrderPlan(orders[p % len(orders)][:pat.n])
+             for p in range(k)]
+    if pat.n == 2:
+        plans = [OrderPlan((0, 1)) if p % 2 else OrderPlan((1, 0))
+                 for p in range(k)]
+
+    loop_eng = OrderEngine(pat, CFG)
+    loop = []
+    for (tid, ts, attr), plan in zip(streams, plans):
+        _, r = loop_eng.process_chunk(
+            loop_eng.init_state(), as_chunk(tid, ts, attr), plan,
+            0.0, 200.0)
+        loop.append(int(r.full_matches))
+
+    fe = FleetEngine("order", pat, k, CFG)
+    chunks = stack_chunks([as_chunk(*s) for s in streams])
+    _, res = fe.process_chunk(fe.init_state(), chunks, plans, 0.0, 200.0)
+    fleet = np.asarray(res.full_matches).tolist()
+
+    oracle = [brute_force_matches(pat, *s, 0.0, 200.0).full_matches
+              for s in streams]
+    assert fleet == loop == oracle
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_tree_fleet_equals_oracle(k, rng):
+    pat = seq_pattern([0, 1, 2], 20.0,
+                      chain_predicates([0, 1, 2], theta=0.4))
+    streams = gen_partition_streams(rng, k, 3, 40)
+    N = TreeNode
+    tp = TreePlan(N(left=N(left=N(leaf=0), right=N(leaf=1)),
+                    right=N(leaf=2)))
+    fe = FleetEngine("tree", pat, k, CFG)
+    chunks = stack_chunks([as_chunk(*s) for s in streams])
+    _, res = fe.process_chunk(fe.init_state(), chunks, tp, 0.0, 200.0)
+    oracle = [brute_force_matches(pat, *s, 0.0, 200.0).full_matches
+              for s in streams]
+    assert np.asarray(res.full_matches).tolist() == oracle
+
+
+def test_fleet_chunked_exactly_once(rng):
+    """Stacked ring buffers carry per-partition history across chunks."""
+    k = 4
+    pat = seq_pattern([0, 1, 2], 12.0,
+                      chain_predicates([0, 1, 2], theta=0.8))
+    streams = gen_partition_streams(rng, k, 3, 60)
+    fe = FleetEngine("order", pat, k, EngineConfig(b_cap=128, m_cap=2048))
+    state = fe.init_state()
+    plans = [OrderPlan((2, 1, 0))] * k
+    totals = np.zeros(k, np.int64)
+    edges = [0.0, 30.0, 55.0, 80.0, 100.0]
+    for t0, t1 in zip(edges[:-1], edges[1:]):
+        parts = []
+        for tid, ts, attr in streams:
+            m = (ts > t0) & (ts <= t1)
+            cap = 60  # shared static capacity: pad each slice
+            pad = cap - int(m.sum())
+            parts.append(Chunk(
+                jnp.asarray(np.concatenate([tid[m],
+                                            np.full(pad, -1, np.int32)])),
+                jnp.asarray(np.concatenate([ts[m],
+                                            np.zeros(pad, np.float32)])),
+                jnp.asarray(np.concatenate(
+                    [attr[m], np.zeros((pad, 1), np.float32)])),
+                jnp.asarray(np.concatenate([np.ones(int(m.sum()), bool),
+                                            np.zeros(pad, bool)])),
+            ))
+        state, res = fe.process_chunk(state, stack_chunks(parts), plans,
+                                      t0, t1)
+        totals += np.asarray(res.full_matches, np.int64)
+    oracle = [brute_force_matches(pat, *s, 0.0, 100.0).full_matches
+              for s in streams]
+    assert totals.tolist() == oracle
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_fleet_runner_adaptive_vs_oracle(k):
+    """Independent per-partition replans + migration stay exactly-once."""
+    pat = seq_pattern([0, 1, 2], 4.0,
+                      chain_predicates([0, 1, 2], theta=-0.3))
+    scfg = StreamConfig(n_types=3, n_chunks=30, chunk_cap=256,
+                        base_rate=12.0, seed=5)
+
+    def streams():
+        return [make_stream("traffic", dataclasses.replace(scfg, seed=5 + p))
+                for p in range(k)]
+
+    runner = FleetRunner(
+        pat, k, planner="greedy",
+        policy_factory=lambda: make_policy("invariant", k=1, d=0.0),
+        engine_cfg=EngineConfig(b_cap=128, m_cap=1024))
+    m = runner.run(stacked_streams(streams()))
+    oracle = [RefEngine(pat).run(s).full_matches for s in streams()]
+    assert m.per_partition_matches.tolist() == oracle
+    assert m.full_matches == sum(oracle)
+
+
+def test_route_events_partitions_by_key(rng):
+    k = 4
+    n = 100
+    tid = rng.integers(0, 3, n).astype(np.int32)
+    ts = np.sort(rng.uniform(0, 50, n)).astype(np.float32)
+    attr = rng.normal(size=(n, 1)).astype(np.float32)
+    keys = rng.integers(0, 1000, n)
+    chunk, dropped = route_events(tid, ts, attr, keys, k, cap=n)
+    assert dropped == 0
+    valid = np.asarray(chunk.valid)
+    assert valid.sum() == n
+    for p in range(k):
+        got = np.asarray(chunk.ts)[p][valid[p]]
+        want = ts[keys % k == p]
+        assert np.array_equal(np.sort(got), np.sort(want))
+    # capacity back-pressure is counted, not silently lost
+    _, dropped2 = route_events(tid, ts, attr, keys, k, cap=10)
+    per_part = np.bincount(keys % k, minlength=k)
+    assert dropped2 == int(np.maximum(per_part - 10, 0).sum())
+
+
+def test_fleet_serving_router_vs_oracle(rng):
+    from repro.core.plans import OrderPlan
+    from repro.serving import CEPFleetServingEngine, CEPStreamRouter
+    k = 4
+    pat = seq_pattern([0, 1, 2], 10.0,
+                      chain_predicates([0, 1, 2], theta=0.5))
+    eng = CEPFleetServingEngine(pat, k, OrderPlan((2, 1, 0)),
+                                EngineConfig(b_cap=128, m_cap=1024),
+                                chunk_cap=256)
+    router = CEPStreamRouter(eng, slice_duration=5.0)
+    n = 200
+    ts = np.sort(rng.uniform(0, 20, n)).astype(np.float32)
+    tid = rng.integers(0, 3, n).astype(np.int32)
+    attr = rng.normal(size=(n, 1)).astype(np.float32)
+    keys = rng.integers(0, 9, n)
+    for i in range(n):
+        router.submit(keys[i], tid[i], ts[i], attr[i])
+    for _ in range(4):
+        router.tick()
+    oracle = []
+    for p in range(k):
+        ref = RefEngine(pat)
+        tot = 0
+        sel = (keys % k) == p
+        for s in range(4):
+            t0, t1 = 5.0 * s, 5.0 * (s + 1)
+            m = sel & (ts > t0) & (ts <= t1)
+            tot += ref.process_chunk(tid[m], ts[m], attr[m],
+                                     t0, t1).full_matches
+        oracle.append(tot)
+    assert eng.matches.tolist() == oracle
+    assert router.pending == 0
+
+
+def test_router_drops_and_counts_late_events(rng):
+    from repro.core.plans import OrderPlan
+    from repro.serving import CEPFleetServingEngine, CEPStreamRouter
+    pat = seq_pattern([0, 1], 5.0)
+    eng = CEPFleetServingEngine(pat, 2, OrderPlan((0, 1)),
+                                EngineConfig(b_cap=32, m_cap=32),
+                                chunk_cap=32)
+    router = CEPStreamRouter(eng, slice_duration=1.0)
+    router.tick()  # close slice (0, 1]
+    # An event whose slice already closed can never be counted
+    # exactly-once; it must be dropped and surfaced, not routed.
+    router.submit(0, 0, 0.5, np.zeros(1, np.float32))
+    router.submit(0, 1, 1.5, np.zeros(1, np.float32))  # on time
+    router.tick()
+    assert router.late_dropped == 1
+    assert router.pending == 0
+
+
+def test_fleet_runner_overflow_escalation_vs_oracle():
+    """Tiny caps force truncation; escalation must restore exact counts."""
+    pat = seq_pattern([0, 1, 2], 4.0,
+                      chain_predicates([0, 1, 2], theta=-0.3))
+    scfg = StreamConfig(n_types=3, n_chunks=12, chunk_cap=256,
+                        base_rate=14.0, seed=9)
+
+    def streams():
+        return [make_stream("stocks", dataclasses.replace(scfg, seed=9 + p))
+                for p in range(2)]
+
+    runner = FleetRunner(pat, 2, planner="greedy",
+                         engine_cfg=EngineConfig(b_cap=64, m_cap=64))
+    m = runner.run(stacked_streams(streams()))
+    oracle = [RefEngine(pat).run(s).full_matches for s in streams()]
+    assert m.escalations > 0
+    assert m.per_partition_matches.tolist() == oracle

@@ -7,7 +7,7 @@ constraint semantics.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import window_join_ref

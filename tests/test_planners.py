@@ -4,7 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.greedy import greedy_order_plan
 from repro.core.patterns import chain_predicates, seq_pattern, and_pattern

@@ -25,6 +25,7 @@ def run(policy, kind, seed=3, **kw):
     return r.run(make_stream(kind, cfg))
 
 
+@pytest.mark.slow
 def test_invariant_on_pareto_frontier_traffic():
     """Traffic regime (skewed, rare large shifts): the invariant method
     must match the best plan quality (lowest regret) at a fraction of the
@@ -38,6 +39,7 @@ def test_invariant_on_pareto_frontier_traffic():
     assert inv.false_positives == 0             # Theorem 1
 
 
+@pytest.mark.slow
 def test_invariant_beats_threshold_on_regret_or_replans():
     """Against the ZStream-style constant threshold: the invariant method
     must be at least as good on plan quality without more replans, for a
@@ -48,6 +50,7 @@ def test_invariant_beats_threshold_on_regret_or_replans():
             or inv.replans <= thr.replans)
 
 
+@pytest.mark.slow
 def test_stocks_regime_unconditional_overadapts():
     """Stocks regime (uniform, frequent small drift): unconditional pays
     constant plan-generation + migration cost for near-zero gain."""
