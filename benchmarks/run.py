@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+import traceback
 
 
 def main(argv=None) -> None:
@@ -46,6 +47,7 @@ def main(argv=None) -> None:
         ("roofline", "roofline table from dry-run artifacts",
          lambda: roofline.main([], quick=quick)),
     ]
+    failed = []
     for key, title, fn in sections:
         if only and key not in only:
             continue
@@ -54,9 +56,20 @@ def main(argv=None) -> None:
         try:
             fn()
         except Exception as e:  # noqa: BLE001 - keep the suite running
+            failed.append(key)
             print(f"!! {key} failed: {type(e).__name__}: {e}")
+            if not quick:
+                # A one-line message has hidden shape bugs before; --full
+                # runs are for debugging, so show where it actually broke.
+                traceback.print_exc(file=sys.stdout)
         print(f"===== {key} done in {time.time()-t0:.1f}s =====",
               flush=True)
+    if failed:
+        # Every selected section ran (failures don't mask each other),
+        # but a red section must fail the invocation — CI smoke relies
+        # on this exit code.
+        print(f"\n!! failed sections: {', '.join(failed)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

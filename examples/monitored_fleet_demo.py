@@ -1,0 +1,69 @@
+"""Device-monitored fleet demo: violation-triggered replans end to end.
+
+K tenants share ONE compiled, vmapped data plane that — in the same jitted
+step — joins each chunk, updates per-partition statistics rings, and
+verifies each tenant's lowered invariant set (paper §3.3-§3.5).  The host
+reads back a single (K,) violation-flag vector per tick; it syncs
+statistics and re-runs the planner ONLY for tenants whose flag fired, so
+per-chunk host work scales with violations, not with fleet size.  Every
+deployment is two row writes (plan matrix + invariant matrix), never a
+recompile.  Match counts are cross-checked against the brute-force oracle.
+
+    PYTHONPATH=src python examples/monitored_fleet_demo.py
+"""
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import EngineConfig, MonitoredFleetRunner
+from repro.core.decision import InvariantPolicy
+from repro.core.fleet import stacked_streams
+from repro.core.patterns import chain_predicates, seq_pattern
+from repro.core.ref_engine import RefEngine
+from repro.data.cep_streams import StreamConfig, make_stream
+
+K = 8
+pattern = seq_pattern([0, 1, 2], window=4.0,
+                      predicates=chain_predicates([0, 1, 2], theta=-0.3))
+scfg = StreamConfig(n_types=3, n_chunks=60, chunk_cap=256,
+                    base_rate=12.0, seed=17)
+
+
+def tenant_streams():
+    # Alternate regimes: even tenants see skewed traffic with rare shocks,
+    # odd tenants see near-uniform drifting stocks — so different tenants
+    # violate their invariants at different times.
+    return [
+        make_stream("traffic" if p % 2 == 0 else "stocks",
+                    dataclasses.replace(scfg, seed=17 + p))
+        for p in range(K)
+    ]
+
+
+runner = MonitoredFleetRunner(
+    pattern, K, planner="greedy",
+    policy_factory=lambda: InvariantPolicy(k=1, d=0.0),
+    engine_cfg=EngineConfig(b_cap=128, m_cap=1024))
+metrics = runner.run(stacked_streams(tenant_streams()))
+
+print(f"== device-monitored fleet of {K} tenants, {metrics.chunks} chunks, "
+      f"{metrics.events} events ==")
+print(f"matches={metrics.full_matches}  violations={metrics.violations}  "
+      f"replans={metrics.replans}  deployments={metrics.deployments}")
+print(f"host statistic syncs: {metrics.host_syncs} "
+      f"(vs {metrics.chunks * K} for host-side monitoring = K x chunks)")
+print(f"last drift per tenant: "
+      f"{[f'{d:+.2f}' for d in metrics.last_drift]}")
+
+print("\ntenant  matches  deployments")
+for p in range(K):
+    print(f"{p:6d}  {metrics.per_partition_matches[p]:7d}  "
+          f"{metrics.per_partition_deployments[p]:11d}")
+
+oracle = [RefEngine(pattern).run(s).full_matches for s in tenant_streams()]
+assert metrics.per_partition_matches.tolist() == oracle, (
+    "fleet disagrees with the brute-force oracle")
+print("\noracle cross-check: OK "
+      "(per-tenant match counts == brute force, replans and all)")

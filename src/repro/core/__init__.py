@@ -12,18 +12,28 @@ partitions.  ``ref_engine`` is the slow brute-force ground-truth oracle.
 from .adaptation import AdaptiveRunner, RunMetrics  # noqa: F401
 from .decision import make_policy  # noqa: F401
 from .engine import EngineConfig, OrderEngine, TreeEngine  # noqa: F401
+from .engine import MonitoredEngine  # noqa: F401
 from .fleet import (  # noqa: F401
     FleetEngine,
     FleetEstimator,
     FleetMetrics,
     FleetRunner,
+    MonitoredFleetRunner,
     route_events,
     stack_chunks,
     stacked_streams,
 )
+from .invariants import (  # noqa: F401
+    InvariantSet,
+    LoweredInvariants,
+    StackedLowered,
+    d_avg_estimate,
+    lower_invariants,
+    stack_lowered,
+    write_lowered_row,
+)
 from .ref_engine import RefEngine, brute_force_matches  # noqa: F401
 from .greedy import greedy_order_plan  # noqa: F401
-from .invariants import InvariantSet, d_avg_estimate  # noqa: F401
 from .patterns import (  # noqa: F401
     CompositePattern,
     Pattern,

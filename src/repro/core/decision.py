@@ -14,6 +14,16 @@ Four policies, matching the experimental study:
 Each policy observes the replans through ``on_replan`` so it can rebase its
 internal state (thresholds rebase the reference vector; invariants rebuild
 the list from the fresh DCSs).
+
+Control-plane flow at fleet scale: ``InvariantPolicy`` owns the *selection*
+of invariants (host-side, once per replan) while the per-chunk
+*verification* can run either on the host (``should_reoptimize`` /
+``decide``) or on device — ``InvariantPolicy.compile()`` lowers the current
+invariant set into ``LoweredInvariants`` tensors that the fused monitored
+step (``engine.make_monitored_process``, vmapped by ``fleet.FleetEngine``)
+evaluates inside the jitted data plane.  The host then consults only the
+returned violation flags and replans flagged partitions, so per-chunk host
+work scales with violations, not with fleet size.
 """
 
 from __future__ import annotations
@@ -39,6 +49,12 @@ class DecisionPolicy:
 
     def decide(self, stat: Stat) -> bool:
         raise NotImplementedError
+
+    def should_reoptimize(self, stat: Stat) -> bool:
+        """Alias of ``decide`` mirroring the paper's reoptimizing-decision
+        naming; the device-monitoring differential tests compare the fleet's
+        violation flags against this."""
+        return self.decide(stat)
 
     def on_replan(self, plan, dcs_list: DCSList, stat: Stat) -> None:
         """Called after every run of ``A`` (including the initial one)."""
@@ -127,6 +143,20 @@ class InvariantPolicy(DecisionPolicy):
             return True  # never planned yet
         self._checks += len(self._set)
         return self._set.check(stat)
+
+    def compile(self, n: int, max_inv: Optional[int] = None,
+                max_terms: Optional[int] = None):
+        """Lower the current invariant set to device tensors.
+
+        Returns ``invariants.LoweredInvariants`` with static shape
+        ``(max_inv, 2, max_terms, ...)`` suitable for stacking across a
+        fleet (pass the fleet-wide caps so every partition's row matches).
+        Must be called after ``on_replan`` has installed an invariant set.
+        """
+        if self._set is None:
+            raise ValueError("compile() before the first on_replan(); the "
+                             "policy has no invariant set yet")
+        return self._set.lower(n, max_inv=max_inv, max_terms=max_terms)
 
     @property
     def invariant_set(self) -> Optional[InvariantSet]:

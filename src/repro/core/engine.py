@@ -568,3 +568,88 @@ def make_engine(kind: str, pattern: Pattern,
     if kind == "tree":
         return TreeEngine(pattern, cfg)
     raise ValueError(f"unknown engine kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Device-resident monitoring: process + statistics + invariants in one step
+# ---------------------------------------------------------------------------
+
+
+def make_monitored_process(process_fn, spec: _Spec, laplace: float = 1.0):
+    """Fuse a plan-execution step with invariant monitoring (paper §3.3-§3.5).
+
+    The returned pure function runs, inside ONE traced program:
+
+    1. the join cascade (``process_fn`` — the plan is still data);
+    2. the per-chunk statistics observation (``stats.chunk_observations``)
+       and the sliding-window ring update (``stats.monitor_update``);
+    3. the lowered deciding-condition evaluation
+       (``invariants.eval_lowered``) over the fresh snapshot.
+
+    It returns ``(buffers, monitor, StepResult, violated, drift, rates,
+    sel)``.  Only ``violated`` (one bool) and ``drift`` (one f32) need to
+    reach the host each chunk; ``rates``/``sel`` stay device-resident and
+    are pulled **only** when the flag fired — this is the paper's
+    low-overhead-monitoring claim realized in the data plane.  Vmapping
+    over a leading partition axis gives the fleet variant.
+    """
+    from .invariants import eval_lowered
+    from .stats import chunk_observations, monitor_snapshot, monitor_update
+
+    def mprocess(buffers, monitor, chunk, plan, lowered, t0, t1,
+                 born_lo, born_hi):
+        buffers, res = process_fn(buffers, chunk, plan, t0, t1,
+                                  born_lo, born_hi)
+        counts, trials, hits = chunk_observations(
+            chunk.type_id, chunk.attr, chunk.valid, spec.type_ids,
+            {"op": spec.op_t, "a_attr": spec.a_attr_t,
+             "b_attr": spec.b_attr_t, "theta": spec.theta_t})
+        monitor = monitor_update(monitor, counts, t1 - t0, trials, hits)
+        rates, sel = monitor_snapshot(monitor, laplace)
+        violated, drift = eval_lowered(lowered, rates, sel)
+        return buffers, monitor, res, violated, drift, rates, sel
+
+    return mprocess
+
+
+class MonitoredEngine:
+    """Single-stream engine with the monitored step compiled in.
+
+    The fleet executor (`fleet.FleetEngine`) vmaps the same fused step; this
+    wrapper is the K = 1 building block used by examples and tests.  Plans
+    enter as rows (``plan_row``) and invariant sets as ``LoweredInvariants``
+    tensors, so neither a replan nor an invariant redeployment recompiles.
+    """
+
+    def __init__(self, kind: str, pattern: Pattern,
+                 cfg: EngineConfig = EngineConfig(),
+                 monitor_buckets: int = 16, laplace: float = 1.0):
+        self.base = make_engine(kind, pattern, cfg)
+        self.kind = kind
+        self.pattern = pattern
+        self.cfg = cfg
+        self.monitor_buckets = monitor_buckets
+        self._step = jax.jit(make_monitored_process(
+            self.base.process_fn, self.base.spec, laplace))
+
+    def init_state(self) -> Buffers:
+        return self.base.init_state()
+
+    def init_monitor(self):
+        from .stats import monitor_init
+
+        return monitor_init(self.pattern.n, self.monitor_buckets)
+
+    def plan_row(self, plan) -> np.ndarray:
+        if self.kind == "order":
+            return np.asarray(plan.order, np.int32)
+        return tree_plan_to_slots(plan)
+
+    def process_chunk(self, buffers, monitor, chunk, plan_row, lowered,
+                      t0: float, t1: float,
+                      born_lo: float = -3.0e38, born_hi: float = 3.0e38):
+        lowered = jax.tree.map(jnp.asarray, lowered)
+        return self._step(buffers, monitor, chunk,
+                          jnp.asarray(plan_row), lowered,
+                          jnp.float32(t0), jnp.float32(t1),
+                          jnp.float32(born_lo), jnp.float32(born_hi))

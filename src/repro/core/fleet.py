@@ -13,17 +13,25 @@ partition axis without recompilation:
 * every partition carries its **own plan array** and its own
   ``born_lo/born_hi`` migration window, so partitions replan and migrate
   independently while sharing the single compiled ``process_chunk``;
-* statistics (``FleetEstimator``) and invariant monitors
-  (one ``DecisionPolicy`` per partition, ``FleetRunner``) live on the
-  host, exactly as in the single-stream loop — the control plane stays
-  per-partition, the data plane is one XLA program.
+* monitoring runs in either of two control planes: ``FleetRunner`` keeps
+  statistics (``FleetEstimator``) and invariant monitors (one
+  ``DecisionPolicy`` per partition) on the host, as in the single-stream
+  loop; ``MonitoredFleetRunner`` keeps the statistics rings **on device**
+  and verifies each partition's lowered invariant set inside the same
+  jitted/vmapped step (§3.3-§3.5's low-overhead monitoring at fleet
+  scale), so the host sees only a ``(K,)`` violation-flag vector and
+  syncs/replans flagged partitions alone — O(violations) host work per
+  chunk instead of O(K·stats).
 
 This is the §2.2 cheap-deployment property at fleet scale: deploying a new
-plan for partition ``p`` writes one row of the stacked plan matrix.
+plan for partition ``p`` writes one row of the stacked plan matrix (and,
+when device-monitored, one row of the stacked invariant tensors).
 
-Differential guarantee: ``FleetEngine`` must return bit-identical match
+Differential guarantees: ``FleetEngine`` must return bit-identical match
 counts to a Python loop of K single-partition engines and to the
-brute-force oracle (``ref_engine``); see ``tests/test_fleet.py``.
+brute-force oracle (``ref_engine``); the device-evaluated violation flags
+must agree with the host ``InvariantPolicy`` decisions on the synced
+statistics; see ``tests/test_fleet.py`` and ``tests/test_monitor.py``.
 """
 
 from __future__ import annotations
@@ -36,12 +44,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .decision import DecisionPolicy
+from .decision import DecisionPolicy, InvariantPolicy
 from .engine import (Buffers, Chunk, EngineConfig, OrderEngine, StepResult,
-                     TreeEngine, tree_plan_to_slots)
+                     TreeEngine, make_monitored_process, tree_plan_to_slots)
+from .invariants import LoweredInvariants, StackedLowered
 from .patterns import Pattern
 from .plans import OrderPlan, TreePlan
-from .stats import Stat, sample_selectivities
+from .stats import (MonitorState, Stat, monitor_init, sample_selectivities,
+                    uniform_stat)
 
 _NEG_INF = -3.0e38
 _POS_INF = 3.0e38
@@ -134,7 +144,8 @@ class FleetEngine:
     """
 
     def __init__(self, kind: str, pattern: Pattern, k: int,
-                 cfg: EngineConfig = EngineConfig()):
+                 cfg: EngineConfig = EngineConfig(),
+                 monitor_laplace: float = 1.0):
         if kind == "order":
             self.base = OrderEngine(pattern, cfg)
         elif kind == "tree":
@@ -145,12 +156,20 @@ class FleetEngine:
         self.pattern = pattern
         self.cfg = cfg
         self.k = int(k)
+        self.monitor_laplace = monitor_laplace
         self._process = jax.jit(jax.vmap(self.base.process_fn))
+        self._mprocess = None  # monitored variant, compiled on first use
 
     # -- state -------------------------------------------------------------
 
     def init_state(self) -> Buffers:
         one = self.base.init_state()
+        return jax.tree.map(
+            lambda x: jnp.tile(x[None], (self.k,) + (1,) * x.ndim), one)
+
+    def init_monitor(self, num_buckets: int = 16) -> MonitorState:
+        """Stacked per-partition statistics rings, device-resident."""
+        one = monitor_init(self.pattern.n, num_buckets)
         return jax.tree.map(
             lambda x: jnp.tile(x[None], (self.k,) + (1,) * x.ndim), one)
 
@@ -192,6 +211,32 @@ class FleetEngine:
                     else self.plans_to_array(plans))
         return self._process(
             state, chunks, plan_arr,
+            self._bcast(t0), self._bcast(t1),
+            self._bcast(born_lo), self._bcast(born_hi))
+
+    def process_chunk_monitored(self, state: Buffers, monitor: MonitorState,
+                                chunks: Chunk, plans,
+                                lowered: LoweredInvariants,
+                                t0, t1, born_lo=_NEG_INF, born_hi=_POS_INF):
+        """One fused chunk tick: joins + statistics rings + invariants.
+
+        ``lowered`` carries a leading K axis (one ``LoweredInvariants`` row
+        per partition, see ``invariants.stack_lowered``).  Returns
+        ``(state, monitor, StepResult, violated (K,), drift (K,),
+        rates (K, n), sel (K, n, n))``.  ``rates``/``sel`` are device
+        arrays — index a single partition before ``np.asarray`` so host
+        syncs stay proportional to violations, not to K.
+        """
+        if self._mprocess is None:
+            self._mprocess = jax.jit(jax.vmap(make_monitored_process(
+                self.base.process_fn, self.base.spec,
+                self.monitor_laplace)))
+        plan_arr = (jnp.asarray(plans)
+                    if isinstance(plans, (np.ndarray, jnp.ndarray))
+                    else self.plans_to_array(plans))
+        lowered = jax.tree.map(jnp.asarray, lowered)
+        return self._mprocess(
+            state, monitor, chunks, plan_arr, lowered,
             self._bcast(t0), self._bcast(t1),
             self._bcast(born_lo), self._bcast(born_hi))
 
@@ -271,8 +316,11 @@ class FleetMetrics:
     migration_partition_chunks: int = 0
     engine_time_s: float = 0.0
     control_time_s: float = 0.0
+    violations: int = 0            # device invariant flags fired
+    host_syncs: int = 0            # per-partition statistic pulls
     per_partition_matches: Optional[np.ndarray] = None
     per_partition_deployments: Optional[np.ndarray] = None
+    last_drift: Optional[np.ndarray] = None  # (K,) §3.4-style margins
 
 
 class FleetRunner:
@@ -368,6 +416,28 @@ class FleetRunner:
                              backend=self.engine_cfg.backend))
         return self._fleets[cap]
 
+    def _deploy(self, p: int, new_plan, t0: float, m: FleetMetrics) -> None:
+        """Deploy with the [36] migration split: the old plan row keeps
+        serving matches born before ``t0``, the new row everything after."""
+        self.old_plans[p] = self.cur_plans[p]
+        self._old_rows[p] = self._cur_rows[p]
+        self.cur_plans[p] = new_plan
+        self._cur_rows[p] = self._plan_row(new_plan)
+        self._replan_t[p] = t0
+        self._migration_until[p] = t0 + self.pattern.window
+        m.deployments += 1
+        m.per_partition_deployments[p] += 1
+
+    def _fold_lapsed(self, t0: float) -> np.ndarray:
+        """Fold partitions whose migration window lapsed back to one row;
+        returns the still-migrating mask."""
+        lapsed = (self._replan_t > _NEG_INF) & (t0 >= self._migration_until)
+        for p in np.nonzero(lapsed)[0]:
+            self.old_plans[p] = None
+            self._old_rows[p] = self._cur_rows[p]
+            self._replan_t[p] = _NEG_INF
+        return self._replan_t > _NEG_INF
+
     def _replan_partition(self, p: int, stat: Stat, t0: float,
                           m: FleetMetrics) -> None:
         policy = self.policies[p]
@@ -384,17 +454,42 @@ class FleetRunner:
         new_plan, dcs = self.planner(self.pattern, stat)
         m.replans += 1
         if new_plan != self.cur_plans[p]:
-            # Deploy with the [36] migration split: the old plan row keeps
-            # serving matches born before t0, the new row everything after.
-            self.old_plans[p] = self.cur_plans[p]
-            self._old_rows[p] = self._cur_rows[p]
-            self.cur_plans[p] = new_plan
-            self._cur_rows[p] = self._plan_row(new_plan)
-            self._replan_t[p] = t0
-            self._migration_until[p] = t0 + self.pattern.window
-            m.deployments += 1
-            m.per_partition_deployments[p] += 1
+            self._deploy(p, new_plan, t0, m)
         policy.on_replan(self.cur_plans[p], dcs, stat)
+
+    # -- engine passes -----------------------------------------------------
+
+    def _counters(self, res: StepResult) -> List[np.ndarray]:
+        return [np.asarray(x, np.int64)
+                for x in (res.full_matches, res.pm_created, res.overflow,
+                          res.closure_expansions, res.neg_rejected)]
+
+    def _pass_b(self, state, fc, out, migrating, chunk):
+        """Pass B: old plans over an empty chunk (events already ingested)
+        pick up matches born before each partition's replan.  Non-migrating
+        partitions have an empty born-window (born_hi = -inf) and
+        contribute zero matches; their pm/overflow measure join work
+        regardless of the born filter, so they are masked out to avoid
+        double-charging the fleet counters."""
+        if migrating.any():
+            empty = chunk._replace(valid=jnp.zeros_like(chunk.valid))
+            state, res_b = self._active_fleet.process_chunk(
+                state, empty, jnp.asarray(self._old_rows), fc.t0, fc.t1,
+                born_lo=_NEG_INF,
+                born_hi=self._replan_t.astype(np.float32))
+            for i, x in enumerate(self._counters(res_b)):
+                out[i] += np.where(migrating, x, 0)
+        return state, out
+
+    def _plain_passes(self, state, fc, chunk, migrating):
+        """Pass A (current plans ingest the chunk; completed matches are
+        restricted to those born at/after each partition's replan time, no
+        restriction at -inf) followed by pass B while migrating."""
+        state, res = self._active_fleet.process_chunk(
+            state, chunk, jnp.asarray(self._cur_rows), fc.t0, fc.t1,
+            born_lo=self._replan_t.astype(np.float32), born_hi=_POS_INF)
+        return self._pass_b(state, fc, self._counters(res), migrating,
+                            chunk)
 
     # -- main loop ---------------------------------------------------------
 
@@ -417,57 +512,12 @@ class FleetRunner:
             for p in range(self.k):
                 self._replan_partition(
                     p, self.estimator.snapshot(p), fc.t0, m)
-            # Partitions whose migration window lapsed fold back to one row.
-            lapsed = (self._replan_t > _NEG_INF) & \
-                (fc.t0 >= self._migration_until)
-            for p in np.nonzero(lapsed)[0]:
-                self.old_plans[p] = None
-                self._old_rows[p] = self._cur_rows[p]
-                self._replan_t[p] = _NEG_INF
-            migrating = self._replan_t > _NEG_INF
+            migrating = self._fold_lapsed(fc.t0)
             m.control_time_s += time.perf_counter() - t_ctl
 
             t_eng = time.perf_counter()
-
-            def passes(chunk, state):
-                # Pass A: current plans ingest the chunk; completed
-                # matches are restricted to those born at/after each
-                # partition's replan time (no restriction at -inf).
-                state, res = self._active_fleet.process_chunk(
-                    state, chunk, jnp.asarray(self._cur_rows),
-                    fc.t0, fc.t1,
-                    born_lo=self._replan_t.astype(np.float32),
-                    born_hi=_POS_INF)
-                out = [np.asarray(x, np.int64)
-                       for x in (res.full_matches, res.pm_created,
-                                 res.overflow, res.closure_expansions,
-                                 res.neg_rejected)]
-                if migrating.any():
-                    # Pass B: old plans over an empty chunk (events
-                    # already ingested) pick up matches born before the
-                    # replan.  Non-migrating partitions have an empty
-                    # born-window (born_hi = -inf) and contribute zero.
-                    empty = chunk._replace(
-                        valid=jnp.zeros_like(chunk.valid))
-                    state, res_b = self._active_fleet.process_chunk(
-                        state, empty, jnp.asarray(self._old_rows),
-                        fc.t0, fc.t1,
-                        born_lo=_NEG_INF,
-                        born_hi=self._replan_t.astype(np.float32))
-                    # Non-migrating partitions ran pass B with old_rows ==
-                    # cur_rows and an empty born-window: their match
-                    # counters are zero by construction, but pm/overflow
-                    # measure join work regardless of the born filter —
-                    # mask them so fleet counters aren't double-charged.
-                    for i, x in enumerate(
-                            (res_b.full_matches, res_b.pm_created,
-                             res_b.overflow, res_b.closure_expansions,
-                             res_b.neg_rejected)):
-                        out[i] += np.where(migrating,
-                                           np.asarray(x, np.int64), 0)
-                return state, out
-
-            state, (full, pm, ov, cl, ng) = passes(fc.chunk, state)
+            state, (full, pm, ov, cl, ng) = self._plain_passes(
+                state, fc, fc.chunk, migrating)
             # Overflow recovery: a truncated join may have dropped
             # matches, so re-evaluate the window at the next pow2 capacity
             # (events already ingested; the recount replaces the truncated
@@ -481,10 +531,204 @@ class FleetRunner:
                 empty = fc.chunk._replace(
                     valid=jnp.zeros_like(fc.chunk.valid))
                 pm_so_far = pm
-                state, (full, pm, ov, cl, ng) = passes(empty, state)
+                state, (full, pm, ov, cl, ng) = self._plain_passes(
+                    state, fc, empty, migrating)
                 pm = pm + pm_so_far
             if migrating.any():
                 m.migration_partition_chunks += int(migrating.sum())
+            m.engine_time_s += time.perf_counter() - t_eng
+
+            m.chunks += 1
+            m.events += int(np.asarray(fc.chunk.valid).sum())
+            m.full_matches += int(full.sum())
+            m.pm_created += int(pm.sum())
+            m.overflow += int(ov.sum())
+            m.closure_expansions += int(cl.sum())
+            m.neg_rejected += int(ng.sum())
+            m.per_partition_matches += full
+        return m
+
+
+# ---------------------------------------------------------------------------
+# Device-monitored fleet loop
+# ---------------------------------------------------------------------------
+
+
+def prime_invariant_policies(pattern: Pattern, planner, policies,
+                             caps: Tuple[Optional[int], Optional[int]]):
+    """Cold start shared by the monitored runner and the serving front.
+
+    Plans once from the uniform prior, installs that plan's invariant set
+    into every partition's policy, and compiles the lowered rows.  Caps
+    left as ``None`` default to the cold-start set's exact sizes (stat-
+    independent for the greedy planner).  Returns
+    ``(plan0, StackedLowered, caps)``.
+    """
+    stat0 = uniform_stat(pattern.n)
+    plan0, dcs0 = planner(pattern, stat0)
+    lows = []
+    for pol in policies:
+        pol.on_replan(plan0, dcs0, stat0)
+        lows.append(pol.compile(pattern.n, *caps))
+    if caps[0] is None or caps[1] is None:
+        caps = (lows[0].active.shape[0], lows[0].scale.shape[-1])
+    return plan0, StackedLowered(lows), caps
+
+
+def replan_flagged_partition(pattern: Pattern, planner, policy,
+                             low: StackedLowered, p: int, stat: Stat,
+                             caps) -> object:
+    """Violation follow-up for one flagged partition: re-run ``A`` on the
+    synced statistics, rebase the policy on the fresh DCSs, and redeploy
+    the partition's lowered invariant row.  Returns the new plan (the
+    caller decides how to deploy it — migration split vs immediate swap).
+    """
+    new_plan, dcs = planner(pattern, stat)
+    policy.on_replan(new_plan, dcs, stat)
+    low.write_row(p, policy.compile(pattern.n, *caps))
+    return new_plan
+
+
+class MonitoredFleetRunner(FleetRunner):
+    """FleetRunner with §3 invariant verification fused into the data plane.
+
+    The host ``FleetRunner`` evaluates every partition's ``DecisionPolicy``
+    in Python each chunk, which requires a device→host sync of the full
+    statistics windows for all K partitions.  This runner instead:
+
+    * keeps the statistics rings **on device** (``FleetEngine.init_monitor``
+      — exhaustive, RNG-free selectivity observation, see
+      ``stats.chunk_observations``);
+    * lowers each partition's invariant set into stacked
+      ``LoweredInvariants`` tensors (``InvariantPolicy.compile``), so the
+      deciding conditions are verified inside the same jitted/vmapped step
+      that joins the chunk;
+    * pulls only the ``(K,)`` violation-flag vector (plus drift telemetry)
+      per chunk and syncs a partition's ``(rates, sel)`` snapshot **only
+      when its flag fired** — per-chunk host work is O(violations), not
+      O(K·stats).
+
+    Violation-flag contract: flags computed over chunk ``c`` trigger a
+    replan that deploys at chunk ``c+1``'s ``t0`` (a *deferred* replan).
+    Exactly-once detection is unaffected: deployment still uses the [36]
+    born-time migration split at the deployment chunk's ``t0``, and plan
+    choice never changes *which* matches exist, only the join work to find
+    them.  A deployment remains a plan-matrix row write plus an
+    invariant-matrix row write — never a recompile.
+
+    ``max_inv`` / ``max_terms`` fix the stacked invariant tensor shape.
+    They default to the sizes of the cold-start (uniform-prior) invariant
+    set, which is exact for the greedy planner (its DCS structure is
+    stat-independent); for tree planners pass explicit worst-case caps —
+    an overflowing replan raises rather than silently truncating.
+    """
+
+    def __init__(self, pattern: Pattern, k: int, planner=None,
+                 policy_factory=None,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 estimator_buckets: int = 16,
+                 max_inv: Optional[int] = None,
+                 max_terms: Optional[int] = None,
+                 escalate_on_overflow: bool = True,
+                 max_escalations: int = 4, seed: int = 0):
+        policy_factory = policy_factory or (
+            lambda: InvariantPolicy(k=1, d=0.0))
+        super().__init__(pattern, k, planner=planner,
+                         policy_factory=policy_factory,
+                         engine_cfg=engine_cfg,
+                         estimator_buckets=estimator_buckets,
+                         escalate_on_overflow=escalate_on_overflow,
+                         max_escalations=max_escalations, seed=seed)
+        for pol in self.policies:
+            if not isinstance(pol, InvariantPolicy):
+                raise TypeError(
+                    "device monitoring verifies lowered invariant sets; "
+                    "policy_factory must produce InvariantPolicy")
+        self.monitor_buckets = estimator_buckets
+        self._caps = (max_inv, max_terms)
+        self._low: Optional[StackedLowered] = None
+
+    # -- invariant deployment ---------------------------------------------
+
+    def _prime(self) -> None:
+        """Cold start: plan every partition from the uniform prior; real
+        statistics arrive with the first chunks and fire the invariants."""
+        plan0, self._low, self._caps = prime_invariant_policies(
+            self.pattern, self.planner, self.policies, self._caps)
+        row0 = self._plan_row(plan0)
+        self._cur_rows = np.tile(row0, (self.k,) + (1,) * row0.ndim)
+        self._old_rows = self._cur_rows.copy()
+        self.cur_plans = [plan0] * self.k
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+        m = FleetMetrics(
+            per_partition_matches=np.zeros(self.k, np.int64),
+            per_partition_deployments=np.zeros(self.k, np.int64))
+        state = self.fleet.init_state()
+        monitor = self.fleet.init_monitor(self.monitor_buckets)
+        if self._low is None:
+            self._prime()
+        pending = np.zeros(self.k, bool)
+        rates_dev = sel_dev = None
+
+        for fc in fleet_stream:
+            t_ctl = time.perf_counter()
+            # Deferred flag-triggered replans: the planner runs only for
+            # partitions whose device flag fired on the previous chunk,
+            # and each costs exactly one statistics sync.  Violations are
+            # counted here, at application time, so ``violations ==
+            # host_syncs == replans`` holds by construction (a flag on the
+            # stream's final chunk never gets applied and is not counted).
+            for p in np.nonzero(pending)[0]:
+                stat = Stat(np.asarray(rates_dev[p], np.float64),
+                            np.asarray(sel_dev[p], np.float64))
+                m.violations += 1
+                m.host_syncs += 1
+                new_plan = replan_flagged_partition(
+                    self.pattern, self.planner, self.policies[p],
+                    self._low, p, stat, self._caps)
+                m.replans += 1
+                if new_plan != self.cur_plans[p]:
+                    self._deploy(p, new_plan, fc.t0, m)
+            pending[:] = False
+            migrating = self._fold_lapsed(fc.t0)
+            m.control_time_s += time.perf_counter() - t_ctl
+
+            t_eng = time.perf_counter()
+            # Pass A, fused: joins + ring update + invariant verification
+            # in ONE compiled vmapped call.
+            state, monitor, res, violated, drift, rates_dev, sel_dev = \
+                self._active_fleet.process_chunk_monitored(
+                    state, monitor, fc.chunk, jnp.asarray(self._cur_rows),
+                    self._low.device(), fc.t0, fc.t1,
+                    born_lo=self._replan_t.astype(np.float32),
+                    born_hi=_POS_INF)
+            state, out = self._pass_b(state, fc, self._counters(res),
+                                      migrating, fc.chunk)
+            full, pm, ov, cl, ng = out
+            # Overflow-escalation recounts run the *plain* passes so the
+            # statistics ring is updated exactly once per chunk (by the
+            # monitored pass above) and flags are never double-observed.
+            tries = 0
+            while (ov.sum() > 0 and self.escalate_on_overflow
+                   and tries < self.max_escalations):
+                self._active_fleet = self._escalated_fleet()
+                m.escalations += 1
+                tries += 1
+                empty = fc.chunk._replace(
+                    valid=jnp.zeros_like(fc.chunk.valid))
+                pm_so_far = pm
+                state, (full, pm, ov, cl, ng) = self._plain_passes(
+                    state, fc, empty, migrating)
+                pm = pm + pm_so_far
+            if migrating.any():
+                m.migration_partition_chunks += int(migrating.sum())
+
+            # The entire per-chunk host round-trip: one (K,) bool vector.
+            pending = np.asarray(violated).copy()
+            m.last_drift = np.asarray(drift, np.float32)
             m.engine_time_s += time.perf_counter() - t_eng
 
             m.chunks += 1

@@ -39,7 +39,7 @@ property tests in ``tests/test_invariants.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -233,8 +233,205 @@ class InvariantSet:
         """``D(stat)``: true iff some invariant is violated (§3.2)."""
         return self.first_violation(stat) is not None
 
+    def lower(self, n: int, max_inv: Optional[int] = None,
+              max_terms: Optional[int] = None) -> "LoweredInvariants":
+        """Lower this set into device tensors (see ``lower_invariants``)."""
+        return lower_invariants(self.invariants, self.d, n,
+                                max_inv=max_inv, max_terms=max_terms)
+
     def __len__(self) -> int:
         return len(self.invariants)
+
+
+# ---------------------------------------------------------------------------
+# Device lowering (§3.3-§3.5 at fleet scale)
+# ---------------------------------------------------------------------------
+#
+# ``InvariantSet`` evaluates on the host in numpy.  For the fleet executor
+# that forces a device→host statistics sync per partition per chunk, so the
+# invariant set is *lowered* into fixed-shape tensors that evaluate inside
+# the jitted data plane:
+#
+#   term value  = const + scale · ∏_j rates[j]^rate_exp[j]
+#                               · ∏_{jk} sel[j,k]^sel_exp[j,k]
+#   side value  = Σ over the term axis
+#   violated    = any(active ∧ lhs > (1+d)·rhs)
+#
+# Exponent form covers every ``Expr`` the planners emit (products of
+# distinct statistics → exponents in {0, 1}) while keeping one static shape
+# per (max_inv, max_terms, n) triple.  Padding rows have scale = const = 0,
+# so they evaluate to exactly 0 on both sides and — with the strict ``>``
+# and ``active`` mask — can never fire.
+
+
+class LoweredInvariants(NamedTuple):
+    """An invariant set as fixed-shape tensors (a jax pytree).
+
+    Shapes (I = max_inv, T = max_terms, n = pattern size); side axis is
+    [0] = lhs, [1] = rhs.  Stacking K of these along a new leading axis
+    yields the fleet's per-partition invariant matrix; deploying a fresh
+    set for one partition writes one row of each field.
+    """
+
+    scale: np.ndarray     # (I, 2, T) f32
+    const: np.ndarray     # (I, 2, T) f32
+    rate_exp: np.ndarray  # (I, 2, T, n) f32
+    sel_exp: np.ndarray   # (I, 2, T, n, n) f32
+    active: np.ndarray    # (I,) bool
+    d: np.ndarray         # ()  f32 — distance margin of this set
+
+
+def lower_invariants(
+    invariants: Sequence[DecidingCondition],
+    d: float,
+    n: int,
+    max_inv: Optional[int] = None,
+    max_terms: Optional[int] = None,
+) -> LoweredInvariants:
+    """Lower deciding conditions into ``LoweredInvariants`` tensors.
+
+    ``max_inv`` / ``max_terms`` fix the static shape (so K lowered sets can
+    be stacked and re-deployed row-wise without recompiling); they default
+    to the exact sizes needed.  Raises ``ValueError`` when the set exceeds
+    the caps — callers stacking across partitions should size the caps for
+    the worst case their planner can emit.
+    """
+    need_i = len(invariants)
+    need_t = max(
+        [len(side) for c in invariants for side in (c.lhs, c.rhs)],
+        default=1)
+    i_cap = need_i if max_inv is None else int(max_inv)
+    t_cap = need_t if max_terms is None else int(max_terms)
+    if need_i > i_cap:
+        raise ValueError(
+            f"{need_i} invariants exceed max_inv={i_cap}; raise the cap")
+    if need_t > t_cap:
+        raise ValueError(
+            f"{need_t} terms/side exceed max_terms={t_cap}; raise the cap")
+    i_cap, t_cap = max(i_cap, 1), max(t_cap, 1)
+
+    scale = np.zeros((i_cap, 2, t_cap), np.float32)
+    const = np.zeros((i_cap, 2, t_cap), np.float32)
+    rate_exp = np.zeros((i_cap, 2, t_cap, n), np.float32)
+    sel_exp = np.zeros((i_cap, 2, t_cap, n, n), np.float32)
+    active = np.zeros((i_cap,), bool)
+    for i, c in enumerate(invariants):
+        active[i] = True
+        for s, side in enumerate((c.lhs, c.rhs)):
+            for t, e in enumerate(side):
+                scale[i, s, t] = e.scale
+                const[i, s, t] = e.const_add
+                for r in e.rate_idx:
+                    rate_exp[i, s, t, r] += 1.0
+                for (a, b) in e.sel_pairs:
+                    sel_exp[i, s, t, a, b] += 1.0
+    return LoweredInvariants(scale, const, rate_exp, sel_exp, active,
+                             np.float32(d))
+
+
+def stack_lowered(rows: Sequence[LoweredInvariants]) -> LoweredInvariants:
+    """Stack per-partition lowered sets along a new leading K axis.
+
+    The result's arrays are host numpy so the control plane can rewrite one
+    partition's row in place on deployment (mirroring the plan matrix).
+    """
+    return LoweredInvariants(*(np.stack([np.asarray(getattr(r, f))
+                                         for r in rows])
+                               for f in LoweredInvariants._fields))
+
+
+def write_lowered_row(stacked: LoweredInvariants, p: int,
+                      row: LoweredInvariants) -> None:
+    """Deploy a fresh invariant set for partition ``p``: one row write per
+    field, never a recompile (shapes must match the stacked caps)."""
+    for f in LoweredInvariants._fields:
+        dst, src = getattr(stacked, f), np.asarray(getattr(row, f))
+        if dst[p].shape != src.shape:
+            raise ValueError(
+                f"lowered field {f!r}: row shape {src.shape} != stacked "
+                f"{dst[p].shape}; lower with the fleet's max_inv/max_terms")
+        dst[p] = src
+
+
+class StackedLowered:
+    """Fleet invariant matrix: host-writable rows, device-cached tensors.
+
+    The control plane rewrites one partition's row on deployment (numpy,
+    in place); the data plane consumes ``device()``, which re-uploads the
+    stacked tensors only after a write.  Without the cache every chunk
+    tick would pay K×6 host→device transfers — measurably more than the
+    monitoring math itself.
+    """
+
+    def __init__(self, rows: Sequence[LoweredInvariants]):
+        self.host = stack_lowered(rows)
+        self._dev: Optional[LoweredInvariants] = None
+
+    def write_row(self, p: int, row: LoweredInvariants) -> None:
+        write_lowered_row(self.host, p, row)
+        if self._dev is not None:
+            # Patch the device copy in place (one-row transfer per field)
+            # rather than invalidating it — otherwise every deployment
+            # would re-upload all K partitions' tensors on the next chunk.
+            import jax.numpy as jnp
+
+            self._dev = LoweredInvariants(*(
+                getattr(self._dev, f).at[p].set(
+                    jnp.asarray(getattr(row, f)))
+                for f in LoweredInvariants._fields))
+
+    def device(self) -> LoweredInvariants:
+        if self._dev is None:
+            import jax.numpy as jnp
+
+            self._dev = LoweredInvariants(
+                *(jnp.asarray(x) for x in self.host))
+        return self._dev
+
+
+def _lowered_sides(low: LoweredInvariants, rates, sel, xp):
+    """Shared jnp/numpy evaluation: per-invariant (lhs, rhs) side values."""
+    rt = xp.prod(rates[None, None, None, :] ** low.rate_exp, axis=-1)
+    sl = xp.prod(sel[None, None, None, :, :] ** low.sel_exp, axis=(-2, -1))
+    term = low.const + low.scale * rt * sl          # (I, 2, T)
+    sides = term.sum(axis=-1)                       # (I, 2)
+    return sides[:, 0], sides[:, 1]
+
+
+def eval_lowered(low: LoweredInvariants, rates, sel):
+    """Device-side ``D``: (violated scalar bool, drift scalar f32).
+
+    ``drift`` is the §3.4-style signed relative margin of the tightest
+    invariant — ``max_i (lhs − (1+d)·rhs) / max(min(|lhs|,|rhs|), ε)`` —
+    positive iff violated; its magnitude is the telemetry distance.
+    Pure jnp, vmappable over a leading partition axis.
+    """
+    import jax.numpy as jnp
+
+    if low.active.shape[0] == 0:
+        return jnp.asarray(False), jnp.float32(-3.0e38)
+    lhs, rhs = _lowered_sides(low, rates, sel, jnp)
+    gap = lhs - (1.0 + low.d) * rhs
+    bad = low.active & (gap > 0.0)
+    rel = gap / jnp.maximum(jnp.minimum(jnp.abs(lhs), jnp.abs(rhs)), 1e-12)
+    drift = jnp.max(jnp.where(low.active, rel, -3.0e38))
+    return jnp.any(bad), drift
+
+
+def check_lowered_np(low: LoweredInvariants, rates: np.ndarray,
+                     sel: np.ndarray) -> Tuple[bool, float]:
+    """Host float32 mirror of ``eval_lowered`` (bit-level reference for the
+    differential tests — same dtype, same operation order)."""
+    if low.active.shape[0] == 0:
+        return False, -3.0e38
+    lhs, rhs = _lowered_sides(
+        low, np.asarray(rates, np.float32), np.asarray(sel, np.float32), np)
+    gap = lhs - (np.float32(1.0) + low.d) * rhs
+    bad = low.active & (gap > 0.0)
+    rel = gap / np.maximum(np.minimum(np.abs(lhs), np.abs(rhs)),
+                           np.float32(1e-12))
+    drift = float(np.max(np.where(low.active, rel, -3.0e38)))
+    return bool(np.any(bad)), drift
 
 
 def make_variance_violation_prob(

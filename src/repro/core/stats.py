@@ -9,12 +9,25 @@ bucket of per-type counts and per-pair (trials, successes) selectivity
 samples, and the estimate is the aggregate over the last ``num_buckets``
 buckets.  This costs O(n + n²) memory and O(1) amortized update time, which
 matches the paper's "negligible system resources" requirement.
+
+Two implementations of the same window semantics live here:
+
+* ``SlidingWindowEstimator`` — the host (numpy) estimator used by the
+  single-stream adaptation loop, fed by Monte-Carlo ``sample_selectivities``.
+* ``MonitorState`` + the ``monitor_*`` pure functions — the **device**
+  ring used by the fused monitored step (`engine.make_monitored_process`),
+  fed by exhaustive, RNG-free ``chunk_observations``.  The device ring
+  lives inside the jitted data plane, so per-chunk monitoring costs no
+  device→host sync; the host pulls a partition's ``(rates, sel)`` snapshot
+  only when that partition's invariant flag fired.  The numpy twin
+  ``exhaustive_selectivities`` computes identical trials/hits on the host,
+  which is what makes host-vs-device differential tests exact.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -105,6 +118,163 @@ class SlidingWindowEstimator:
         return self._filled > 0
 
 
+# ---------------------------------------------------------------------------
+# Device-resident window estimator (used by the fused monitored step)
+# ---------------------------------------------------------------------------
+
+
+class MonitorState(NamedTuple):
+    """Device twin of one partition's sliding statistics window.
+
+    Same ring-of-buckets semantics as ``SlidingWindowEstimator`` (and one
+    row of ``fleet.FleetEstimator``), but a jax pytree updated inside the
+    jitted step.  Stacking along a leading K axis (``jax.vmap``) yields the
+    fleet's stacked statistics rings.
+    """
+
+    counts: "object"     # (buckets, n) f32 per-type counts per bucket
+    durations: "object"  # (buckets,)   f32 chunk durations
+    trials: "object"     # (buckets, n, n) f32 predicate pair trials
+    hits: "object"       # (buckets, n, n) f32 predicate pair hits
+    head: "object"       # () i32 ring head
+    filled: "object"     # () i32 buckets filled so far
+
+
+def monitor_init(n: int, num_buckets: int = 16) -> MonitorState:
+    import jax.numpy as jnp
+
+    return MonitorState(
+        counts=jnp.zeros((num_buckets, n), jnp.float32),
+        durations=jnp.zeros((num_buckets,), jnp.float32),
+        trials=jnp.zeros((num_buckets, n, n), jnp.float32),
+        hits=jnp.zeros((num_buckets, n, n), jnp.float32),
+        head=jnp.int32(0),
+        filled=jnp.int32(0),
+    )
+
+
+def monitor_update(state: MonitorState, counts, duration, trials,
+                   hits) -> MonitorState:
+    """Push one chunk of observations into the ring (device mirror of
+    ``SlidingWindowEstimator.update``)."""
+    import jax.numpy as jnp
+
+    h = state.head
+    buckets = state.durations.shape[0]
+    return MonitorState(
+        counts=state.counts.at[h].set(counts),
+        durations=state.durations.at[h].set(
+            jnp.maximum(jnp.float32(duration), 1e-9)),
+        trials=state.trials.at[h].set(trials),
+        hits=state.hits.at[h].set(hits),
+        head=(h + 1) % buckets,
+        filled=jnp.minimum(state.filled + 1, buckets),
+    )
+
+
+def monitor_snapshot(state: MonitorState, laplace: float = 1.0):
+    """(rates (n,), sel (n, n)) — device mirror of ``snapshot``."""
+    import jax.numpy as jnp
+
+    total_t = jnp.where(state.filled > 0, state.durations.sum(), 1.0)
+    rates = state.counts.sum(axis=0) / jnp.maximum(total_t, 1e-9)
+    trials = state.trials.sum(axis=0)
+    hits = state.hits.sum(axis=0)
+    lp = laplace
+    sel = (hits + lp) / (trials + 2.0 * lp)
+    sel = jnp.where(trials > 0, sel, 1.0)
+    return rates, sel
+
+
+def _pred_ok(xp, op: int, theta: float, a, b):
+    from .patterns import PRED_ABS_LE, PRED_GT, PRED_LT
+
+    if op == PRED_LT:
+        return a < b + theta
+    if op == PRED_GT:
+        return a > b - theta
+    if op == PRED_ABS_LE:
+        return xp.abs(a - b) <= theta
+    raise ValueError(f"unexpected predicate op {op}")  # pragma: no cover
+
+
+def chunk_observations(tid, attr, valid, type_ids: Sequence[int],
+                       pred_tensors: dict):
+    """Per-chunk monitored observations, computed on device.
+
+    Returns (counts (n,), trials (n, n), hits (n, n)).  Selectivities are
+    **exhaustive**: for every pattern-position pair carrying a predicate,
+    every cross pair of in-chunk events of the two types is evaluated —
+    O(cap²) bitwise work per pair, trivial next to the join cascade, and
+    deterministic (no RNG), which is what lets the host verify the device
+    flags bit-for-bit.  Pair structure is static (baked at trace time), so
+    one compiled step serves every chunk.
+    """
+    import jax.numpy as jnp
+
+    from .patterns import PRED_NONE
+
+    n = len(type_ids)
+    op_t = np.asarray(pred_tensors["op"])
+    a_attr = np.asarray(pred_tensors["a_attr"])
+    b_attr = np.asarray(pred_tensors["b_attr"])
+    theta = np.asarray(pred_tensors["theta"])
+
+    masks = [valid & (tid == t) for t in type_ids]
+    counts = jnp.stack([m.sum().astype(jnp.float32) for m in masks])
+    trials = jnp.zeros((n, n), jnp.float32)
+    hits = jnp.zeros((n, n), jnp.float32)
+    for p in range(n):
+        for q in range(p + 1, n):
+            if op_t[p, q] == PRED_NONE:
+                continue
+            a = attr[:, a_attr[p, q]]
+            b = attr[:, b_attr[p, q]]
+            ok = _pred_ok(jnp, int(op_t[p, q]), float(theta[p, q]),
+                          a[:, None], b[None, :])
+            pair_mask = masks[p][:, None] & masks[q][None, :]
+            t_pq = counts[p] * counts[q]
+            h_pq = (ok & pair_mask).sum().astype(jnp.float32)
+            trials = trials.at[p, q].set(t_pq).at[q, p].set(t_pq)
+            hits = hits.at[p, q].set(h_pq).at[q, p].set(h_pq)
+    return counts, trials, hits
+
+
+def exhaustive_selectivities(
+    tid: np.ndarray,
+    attrs: np.ndarray,
+    pred_tensors: dict,
+    type_ids: Sequence[int],
+    n: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host numpy twin of ``chunk_observations``'s selectivity part.
+
+    Same exhaustive pair counting over one (already valid-filtered) chunk;
+    returns float64 (trials, hits) for the host estimator rings.  Used by
+    differential tests and by host-side catch-up after a violation.
+    """
+    from .patterns import PRED_NONE
+
+    op_t = np.asarray(pred_tensors["op"])
+    a_attr = np.asarray(pred_tensors["a_attr"])
+    b_attr = np.asarray(pred_tensors["b_attr"])
+    theta = np.asarray(pred_tensors["theta"])
+    trials = np.zeros((n, n), np.float64)
+    hits = np.zeros((n, n), np.float64)
+    masks = [tid == t for t in type_ids]
+    for p in range(n):
+        for q in range(p + 1, n):
+            if op_t[p, q] == PRED_NONE:
+                continue
+            a = attrs[masks[p]][:, a_attr[p, q]]
+            b = attrs[masks[q]][:, b_attr[p, q]]
+            ok = _pred_ok(np, int(op_t[p, q]), float(theta[p, q]),
+                          a[:, None], b[None, :])
+            trials[p, q] = trials[q, p] = float(len(a) * len(b))
+            hits[p, q] = hits[q, p] = float(np.sum(ok))
+    return trials, hits
+
+
 def sample_selectivities(
     rng: np.random.Generator,
     type_id: np.ndarray,
@@ -126,7 +296,7 @@ def sample_selectivities(
     live join matrices are not enough (paper §2.2 keeps estimation
     plan-independent for the same reason).
     """
-    from .patterns import PRED_NONE, PRED_LT, PRED_GT, PRED_ABS_LE
+    from .patterns import PRED_NONE
 
     op = pred_tensors["op"]
     a_attr = pred_tensors["a_attr"]
@@ -149,15 +319,10 @@ def sample_selectivities(
             m = samples_per_pair
             sa = attrs[rng.choice(ip, m), a_attr[p, q]]
             sb = attrs[rng.choice(iq, m), b_attr[p, q]]
-            o, th = int(op[p, q]), float(theta[p, q])
-            if o == PRED_LT:
-                ok = sa < sb + th
-            elif o == PRED_GT:
-                ok = sa > sb - th
-            elif o == PRED_ABS_LE:
-                ok = np.abs(sa - sb) <= th
-            else:  # pragma: no cover - PRED_NONE filtered above
-                ok = np.ones(m, bool)
+            # Same dispatch as the device/exhaustive paths (_pred_ok), so
+            # host Monte-Carlo and device statistics can never diverge in
+            # predicate convention.
+            ok = _pred_ok(np, int(op[p, q]), float(theta[p, q]), sa, sb)
             trials[p, q] = trials[q, p] = m
             hits[p, q] = hits[q, p] = float(ok.sum())
     return trials, hits

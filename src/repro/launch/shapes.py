@@ -47,7 +47,8 @@ def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
         return False, (
             "long_500k requires sub-quadratic attention; "
             f"{cfg.name} is a pure full-attention architecture "
-            "(skip documented in DESIGN.md §Arch-applicability)")
+            "(skip documented in DESIGN.md §5.1 Architecture "
+            "applicability)")
     return True, ""
 
 

@@ -1,5 +1,10 @@
 """Serving substrate: prefill/decode engine, adaptive batch scheduler, and
-the keyed-stream router for the partitioned CEP fleet."""
+the keyed-stream router for the partitioned CEP fleet (plain or with
+device-resident invariant monitoring)."""
 
-from .engine import CEPFleetServingEngine, ServingEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    CEPFleetServingEngine,
+    MonitoredCEPFleetServingEngine,
+    ServingEngine,
+)
 from .scheduler import CEPStreamRouter, Request, Scheduler  # noqa: F401

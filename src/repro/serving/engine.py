@@ -13,6 +13,13 @@ partitions occupy fleet *rows*; a keyed event batch is routed by
 ``key % K`` into stacked per-partition chunks and the whole fleet advances
 with ONE compiled vmapped ``process_chunk``.  Deploying a new plan for a
 partition writes one row of the stacked plan matrix — never a recompile.
+
+``MonitoredCEPFleetServingEngine`` adds the device-resident control loop:
+per-partition statistics rings and lowered invariant sets ride inside the
+same compiled call, the host reads back only a ``(K,)`` violation-flag
+vector, and a flagged partition is re-planned from its synced device
+statistics before the next batch — per-batch host work is O(violations),
+not O(K·stats).
 """
 
 from __future__ import annotations
@@ -24,9 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.adaptation import make_planner
+from ..core.decision import InvariantPolicy
 from ..core.engine import EngineConfig
-from ..core.fleet import FleetEngine, route_events
+from ..core.fleet import (FleetEngine, prime_invariant_policies,
+                          replan_flagged_partition, route_events)
 from ..core.patterns import Pattern
+from ..core.stats import Stat
 from ..models.config import ModelConfig
 from ..models.model import Cache, Model
 
@@ -121,18 +132,14 @@ class CEPFleetServingEngine:
         """Cheap deployment (§2.2): rewrite one stacked plan row."""
         self._rows[partition] = self.fleet.plan_row(plan)
 
-    def process_batch(self, type_id, ts, attr, keys,
-                      t0: float, t1: float) -> np.ndarray:
-        """Route one keyed event batch and tick the fleet once.
-
-        Returns the per-partition full-match counts for this slice.
-        """
+    def _route(self, type_id, ts, attr, keys):
         chunk, dropped = route_events(
             np.asarray(type_id), np.asarray(ts), np.asarray(attr),
             np.asarray(keys), self.k, self.chunk_cap)
         self.dropped += dropped
-        self.state, res = self.fleet.process_chunk(
-            self.state, chunk, self._rows, t0, t1)
+        return chunk
+
+    def _accumulate(self, res) -> np.ndarray:
         full = np.asarray(res.full_matches, np.int64)
         self.matches += full
         self.neg_rejected += np.asarray(res.neg_rejected, np.int64)
@@ -141,4 +148,90 @@ class CEPFleetServingEngine:
         # Match-set truncation undercounts matches; surface it per
         # partition so undercounting is never silent.
         self.overflow += np.asarray(res.overflow, np.int64)
+        return full
+
+    def process_batch(self, type_id, ts, attr, keys,
+                      t0: float, t1: float) -> np.ndarray:
+        """Route one keyed event batch and tick the fleet once.
+
+        Returns the per-partition full-match counts for this slice.
+        """
+        chunk = self._route(type_id, ts, attr, keys)
+        self.state, res = self.fleet.process_chunk(
+            self.state, chunk, self._rows, t0, t1)
+        return self._accumulate(res)
+
+
+class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
+    """Serving fleet with on-device invariant monitoring (§3.3-§3.5).
+
+    Partitions start on a plan generated from the uniform prior; real
+    per-partition statistics accumulate in device-resident rings inside
+    the compiled batch call.  When a partition's lowered invariant set
+    flags a violation, the host syncs that partition's ``(rates, sel)``
+    snapshot, re-runs the planner, and deploys the new plan row and the
+    freshly compiled invariant row — all array writes, never a recompile.
+
+    The serving front deploys immediately (no [36] migration split):
+    partial matches are rebuilt from the ring buffers every slice, so a
+    row swap between batches changes only join *work*, never *which*
+    matches are counted — exactly-once detection is preserved (see
+    DESIGN.md §7).
+
+    Telemetry: ``violations`` / ``replans`` (per partition),
+    ``host_syncs`` (total statistic pulls — ∝ violations, not K·batches),
+    and ``last_drift`` (the §3.4-style relative margin of each
+    partition's tightest invariant after the latest batch).
+    """
+
+    def __init__(self, pattern: Pattern, k: int,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 kind: Optional[str] = None, chunk_cap: int = 512,
+                 planner: str = "greedy", policy_kw: Optional[dict] = None,
+                 monitor_buckets: int = 16,
+                 max_inv: Optional[int] = None,
+                 max_terms: Optional[int] = None):
+        self.pattern = pattern
+        self.planner = make_planner(planner)
+        # The plan family must match the planner's output (an order vector
+        # vs a slot-join program); derive it unless explicitly overridden.
+        kind = kind or ("order" if planner == "greedy" else "tree")
+        self.policies = [InvariantPolicy(**(policy_kw or {}))
+                         for _ in range(k)]
+        plan0, self._low, self._caps = prime_invariant_policies(
+            pattern, self.planner, self.policies, (max_inv, max_terms))
+        super().__init__(pattern, k, plan0, engine_cfg, kind, chunk_cap)
+        self.plans = [plan0] * k
+        self.monitor = self.fleet.init_monitor(monitor_buckets)
+        self.violations = np.zeros(k, np.int64)
+        self.replans = np.zeros(k, np.int64)
+        self.host_syncs = 0
+        self.last_drift = np.full(k, -np.inf, np.float32)
+
+    def process_batch(self, type_id, ts, attr, keys,
+                      t0: float, t1: float) -> np.ndarray:
+        """Route one keyed batch, tick the fused monitored fleet once, and
+        replan any partition whose invariant flag fired."""
+        chunk = self._route(type_id, ts, attr, keys)
+        self.state, self.monitor, res, violated, drift, rates, sel = \
+            self.fleet.process_chunk_monitored(
+                self.state, self.monitor, chunk, self._rows,
+                self._low.device(), t0, t1)
+        full = self._accumulate(res)
+        self.last_drift = np.asarray(drift, np.float32)
+
+        # Control plane: O(violations) — sync + replan flagged rows only.
+        fired = np.nonzero(np.asarray(violated))[0]
+        for p in fired:
+            self.violations[p] += 1
+            self.host_syncs += 1
+            stat = Stat(np.asarray(rates[p], np.float64),
+                        np.asarray(sel[p], np.float64))
+            new_plan = replan_flagged_partition(
+                self.pattern, self.planner, self.policies[p],
+                self._low, p, stat, self._caps)
+            if new_plan != self.plans[p]:
+                self.plans[p] = new_plan
+                self.deploy_plan(p, new_plan)
+                self.replans[p] += 1
         return full

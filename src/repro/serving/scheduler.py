@@ -115,6 +115,13 @@ class CEPStreamRouter:
     latest-event rule, so they are dropped and surfaced in
     ``late_dropped`` rather than silently routed into a slice that will
     ignore the matches they complete.
+
+    The router is engine-agnostic: hand it a plain
+    ``CEPFleetServingEngine`` (static plans, ``deploy_plan`` driven by an
+    external control loop) or a ``MonitoredCEPFleetServingEngine``, in
+    which case every ``tick`` also verifies the per-partition invariant
+    sets on device and self-replans flagged partitions; adaptation
+    telemetry is then available via ``monitor_telemetry``.
     """
 
     def __init__(self, engine: CEPFleetServingEngine,
@@ -139,6 +146,19 @@ class CEPStreamRouter:
     @property
     def pending(self) -> int:
         return len(self._ts)
+
+    def monitor_telemetry(self) -> Optional[dict]:
+        """Adaptation counters when the engine is device-monitored:
+        ``{violations, replans, host_syncs, last_drift}``; None otherwise.
+        """
+        if not hasattr(self.engine, "violations"):
+            return None
+        return {
+            "violations": self.engine.violations.copy(),
+            "replans": self.engine.replans.copy(),
+            "host_syncs": self.engine.host_syncs,
+            "last_drift": self.engine.last_drift.copy(),
+        }
 
     def tick(self) -> np.ndarray:
         """Close one slice; returns per-partition match counts for it."""

@@ -1,0 +1,270 @@
+"""Device-resident invariant monitoring: differential tests.
+
+Three layers of agreement are asserted:
+
+1. the lowered tensor evaluation (`invariants.eval_lowered`) agrees with
+   the host ``InvariantSet`` and with the float32 numpy mirror;
+2. the ``(K,)`` violation flags coming out of the fused monitored fleet
+   step agree with the host ``InvariantPolicy.should_reoptimize`` decision
+   on the synced device statistics, for K ∈ {1, 4, 16}, over a drifting
+   stream with flag-triggered replans in the loop;
+3. end-to-end match counts of the flag-triggered adaptive runners still
+   agree with the brute-force oracle (``core/ref_engine``).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.decision import InvariantPolicy
+from repro.core.engine import EngineConfig, MonitoredEngine
+from repro.core.fleet import (FleetEngine, MonitoredFleetRunner,
+                              stacked_streams)
+from repro.core.greedy import greedy_order_plan
+from repro.core.invariants import (InvariantSet, check_lowered_np,
+                                   eval_lowered, stack_lowered,
+                                   write_lowered_row)
+from repro.core.patterns import chain_predicates, seq_pattern
+from repro.core.ref_engine import RefEngine
+from repro.core.stats import (Stat, chunk_observations,
+                              exhaustive_selectivities, uniform_stat)
+from repro.data.cep_streams import StreamConfig, make_stream
+
+PAT = seq_pattern([0, 1, 2], 4.0, chain_predicates([0, 1, 2], theta=-0.3))
+CFG = EngineConfig(b_cap=64, m_cap=512)
+
+
+def _rand_stat(rng, n):
+    sel = np.eye(n) * 0 + rng.uniform(0.05, 1.0, (n, n))
+    sel = (sel + sel.T) / 2
+    return Stat(rng.uniform(0.1, 20.0, n), sel)
+
+
+def _low_row(low, p):
+    return jax.tree.map(lambda x: np.asarray(x)[p], low)
+
+
+def _assert_flags_agree(v_dev, v_np, drift_np, host):
+    """Device flag == float32 mirror, bit-for-bit (same dtype, same
+    operation order).  The float64 host policy must agree everywhere
+    except within float32 rounding of an *exact tie* — |drift| below
+    f32 resolution — where the strict ``>`` may legitimately flip."""
+    assert bool(v_dev) == v_np
+    assert host == v_np or abs(drift_np) < 1e-5
+
+
+def test_lowering_matches_host_invariant_set(rng):
+    """eval_lowered / check_lowered_np == InvariantSet.check over random
+    statistics, for every selection strategy the planner can emit."""
+    n = PAT.n
+    for strategy, k in (("tightest", 1), ("tightest", 2), ("all", 99)):
+        pol = InvariantPolicy(k=k, d=0.1, strategy=strategy)
+        base = _rand_stat(rng, n)
+        plan, dcs = greedy_order_plan(PAT, base)
+        pol.on_replan(plan, dcs, base)
+        low = pol.compile(n)
+        iset: InvariantSet = pol.invariant_set
+        for _ in range(50):
+            stat = _rand_stat(rng, n)
+            host = iset.check(stat)
+            r32 = stat.rates.astype(np.float32)
+            s32 = stat.sel.astype(np.float32)
+            v_np, drift_np = check_lowered_np(low, r32, s32)
+            v_dev, drift_dev = jax.tree.map(
+                np.asarray, eval_lowered(jax.tree.map(np.asarray, low),
+                                         r32, s32))
+            _assert_flags_agree(v_dev, v_np, drift_np, host)
+            assert bool(v_np) == (drift_np > 0.0)
+            np.testing.assert_allclose(drift_dev, drift_np, rtol=1e-5)
+
+
+def test_lowering_cap_overflow_raises(rng):
+    pol = InvariantPolicy(k=2, d=0.0)
+    plan, dcs = greedy_order_plan(PAT, uniform_stat(PAT.n))
+    pol.on_replan(plan, dcs, uniform_stat(PAT.n))
+    with pytest.raises(ValueError, match="max_inv"):
+        pol.compile(PAT.n, max_inv=1)
+
+
+def test_chunk_observations_match_host_mirror(rng):
+    """Device exhaustive selectivity counting == the numpy twin."""
+    import jax.numpy as jnp
+
+    n_ev = 120
+    tid = rng.integers(0, 3, n_ev).astype(np.int32)
+    attr = rng.normal(size=(n_ev, 1)).astype(np.float32)
+    valid = rng.random(n_ev) < 0.8
+    counts, trials, hits = jax.tree.map(np.asarray, chunk_observations(
+        jnp.asarray(tid), jnp.asarray(attr), jnp.asarray(valid),
+        PAT.type_ids, PAT.pred_tensors()))
+    trials_h, hits_h = exhaustive_selectivities(
+        tid[valid], attr[valid], PAT.pred_tensors(), PAT.type_ids, PAT.n)
+    for p, t in enumerate(PAT.type_ids):
+        assert counts[p] == ((tid == t) & valid).sum()
+    np.testing.assert_array_equal(trials, trials_h)
+    np.testing.assert_array_equal(hits, hits_h)
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_device_flags_match_host_policy(k):
+    """The tentpole differential: on-device violated flags == host
+    ``InvariantPolicy.should_reoptimize`` on the synced statistics, chunk
+    by chunk over a drifting stream, with flag-triggered replans applied
+    (so the invariant sets themselves churn during the run)."""
+    scfg = StreamConfig(n_types=3, n_chunks=20, chunk_cap=128,
+                       base_rate=8.0, seed=11)
+    streams = [make_stream("stocks", dataclasses.replace(scfg, seed=11 + p))
+               for p in range(k)]
+    fe = FleetEngine("order", PAT, k, CFG)
+    state, mon = fe.init_state(), fe.init_monitor()
+    stat0 = uniform_stat(PAT.n)
+    plan0, dcs0 = greedy_order_plan(PAT, stat0)
+    pols = [InvariantPolicy(k=1, d=0.0) for _ in range(k)]
+    for pol in pols:
+        pol.on_replan(plan0, dcs0, stat0)
+    low = stack_lowered([pol.compile(PAT.n) for pol in pols])
+    rows = np.tile(np.asarray(plan0.order, np.int32), (k, 1))
+    plans = [plan0] * k
+
+    fired_total = 0
+    for fc in stacked_streams(streams):
+        state, mon, res, violated, drift, rates, sel = \
+            fe.process_chunk_monitored(state, mon, fc.chunk, rows, low,
+                                       fc.t0, fc.t1)
+        v = np.asarray(violated)
+        dr = np.asarray(drift)
+        for p in range(k):
+            synced = Stat(np.asarray(rates[p], np.float64),
+                          np.asarray(sel[p], np.float64))
+            # float32 bit-level reference: same lowering, same dtype.
+            v_np, drift_np = check_lowered_np(
+                _low_row(low, p), np.asarray(rates[p]), np.asarray(sel[p]))
+            _assert_flags_agree(v[p], v_np, drift_np,
+                                pols[p].should_reoptimize(synced))
+            np.testing.assert_allclose(dr[p], drift_np, rtol=1e-5)
+            if v[p]:
+                fired_total += 1
+                new_plan, dcs = greedy_order_plan(PAT, synced)
+                # Theorem 1 at d=0: a violation implies a new plan.
+                assert new_plan != plans[p]
+                plans[p] = new_plan
+                rows[p] = np.asarray(new_plan.order, np.int32)
+                pols[p].on_replan(new_plan, dcs, synced)
+                write_lowered_row(low, p, pols[p].compile(PAT.n))
+    assert fired_total > 0, "drifting stream never fired — test is vacuous"
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_monitored_runner_matches_oracle(k):
+    """Flag-triggered (deferred) replans keep exactly-once detection."""
+    scfg = StreamConfig(n_types=3, n_chunks=30, chunk_cap=256,
+                       base_rate=12.0, seed=5)
+
+    def streams():
+        return [make_stream("traffic", dataclasses.replace(scfg, seed=5 + p))
+                for p in range(k)]
+
+    runner = MonitoredFleetRunner(
+        PAT, k, planner="greedy",
+        policy_factory=lambda: InvariantPolicy(k=1, d=0.0),
+        engine_cfg=EngineConfig(b_cap=128, m_cap=1024))
+    m = runner.run(stacked_streams(streams()))
+    oracle = [RefEngine(PAT).run(s).full_matches for s in streams()]
+    assert m.per_partition_matches.tolist() == oracle
+    assert m.full_matches == sum(oracle)
+    # Host control work scales with violations, not with K·chunks.
+    assert m.host_syncs == m.violations == m.replans
+    assert m.host_syncs < m.chunks * k
+    assert m.last_drift is not None and m.last_drift.shape == (k,)
+
+
+def test_monitored_runner_overflow_escalation_matches_oracle():
+    """Tiny caps force truncation; the plain escalation recount must not
+    double-update the device statistics ring (counts stay exact)."""
+    scfg = StreamConfig(n_types=3, n_chunks=12, chunk_cap=256,
+                       base_rate=14.0, seed=9)
+
+    def streams():
+        return [make_stream("stocks", dataclasses.replace(scfg, seed=9 + p))
+                for p in range(2)]
+
+    runner = MonitoredFleetRunner(
+        PAT, 2, planner="greedy",
+        engine_cfg=EngineConfig(b_cap=64, m_cap=64))
+    m = runner.run(stacked_streams(streams()))
+    oracle = [RefEngine(PAT).run(s).full_matches for s in streams()]
+    assert m.escalations > 0
+    assert m.per_partition_matches.tolist() == oracle
+
+
+def test_monitored_single_stream_engine(rng):
+    """The K = 1 building block: fused step flags == host policy."""
+    stream = make_stream("stocks", StreamConfig(
+        n_types=3, n_chunks=15, chunk_cap=128, base_rate=8.0, seed=3))
+    eng = MonitoredEngine("order", PAT, CFG)
+    state, mon = eng.init_state(), eng.init_monitor()
+    stat0 = uniform_stat(PAT.n)
+    plan, dcs = greedy_order_plan(PAT, stat0)
+    pol = InvariantPolicy(k=1, d=0.0)
+    pol.on_replan(plan, dcs, stat0)
+    low = pol.compile(PAT.n)
+    caps = (low.active.shape[0], low.scale.shape[-1])
+    fired = 0
+    for rec in stream:
+        state, mon, res, violated, drift, rates, sel = eng.process_chunk(
+            state, mon, rec.chunk, eng.plan_row(plan), low,
+            rec.t0, rec.t1)
+        synced = Stat(np.asarray(rates, np.float64),
+                      np.asarray(sel, np.float64))
+        v_np, drift_np = check_lowered_np(
+            low, np.asarray(rates), np.asarray(sel))
+        _assert_flags_agree(np.asarray(violated), v_np, drift_np,
+                            pol.should_reoptimize(synced))
+        if np.asarray(violated):
+            fired += 1
+            plan, dcs = greedy_order_plan(PAT, synced)
+            pol.on_replan(plan, dcs, synced)
+            low = pol.compile(PAT.n, *caps)
+    assert fired > 0
+
+
+def test_monitored_serving_engine_vs_oracle(rng):
+    """Violation-triggered replans in the serving front: counts stay
+    oracle-exact and host syncs equal the number of fired flags."""
+    from repro.serving import CEPFleetServingEngine  # noqa: F401
+    from repro.serving import CEPStreamRouter, MonitoredCEPFleetServingEngine
+
+    k = 4
+    pat = seq_pattern([0, 1, 2], 10.0,
+                      chain_predicates([0, 1, 2], theta=0.5))
+    eng = MonitoredCEPFleetServingEngine(
+        pat, k, EngineConfig(b_cap=128, m_cap=1024), chunk_cap=256)
+    router = CEPStreamRouter(eng, slice_duration=5.0)
+    n = 200
+    ts = np.sort(rng.uniform(0, 20, n)).astype(np.float32)
+    tid = rng.integers(0, 3, n).astype(np.int32)
+    attr = rng.normal(size=(n, 1)).astype(np.float32)
+    keys = rng.integers(0, 9, n)
+    for i in range(n):
+        router.submit(keys[i], tid[i], ts[i], attr[i])
+    for _ in range(4):
+        router.tick()
+    oracle = []
+    for p in range(k):
+        ref = RefEngine(pat)
+        tot = 0
+        sel = (keys % k) == p
+        for s in range(4):
+            t0, t1 = 5.0 * s, 5.0 * (s + 1)
+            m = sel & (ts > t0) & (ts <= t1)
+            tot += ref.process_chunk(tid[m], ts[m], attr[m],
+                                     t0, t1).full_matches
+        oracle.append(tot)
+    # Plan swaps between slices never change which matches are counted.
+    assert eng.matches.tolist() == oracle
+    tele = router.monitor_telemetry()
+    assert tele is not None
+    assert tele["host_syncs"] == int(eng.violations.sum())
+    assert tele["last_drift"].shape == (k,)
