@@ -1,10 +1,12 @@
-"""Partitioned fleet demo: K tenants, one compiled data plane.
+"""Partitioned fleet demo: K tenants, one compiled data plane, one facade.
 
 Each tenant (stream partition) has its own statistical regime, its own
 invariant monitor and its own evaluation plan; all K advance through ONE
-vmapped ``process_chunk`` per tick.  The demo runs the adaptive fleet,
-shows per-partition replan activity, and cross-checks every partition's
-match count against the brute-force oracle.
+vmapped ``process_chunk`` per tick.  The whole runtime is driven through
+``repro.cep``: the pattern is built with the fluent DSL, the fleet is a
+``Session`` (partitions/plan/monitoring are configuration, not classes),
+and every partition's match count is cross-checked against the
+brute-force oracle.
 
     PYTHONPATH=src python examples/fleet_demo.py
 """
@@ -14,15 +16,15 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import EngineConfig, make_policy
-from repro.core.fleet import FleetRunner, stacked_streams
-from repro.core.patterns import chain_predicates, seq_pattern
-from repro.core.ref_engine import RefEngine
+from repro import cep
+from repro.cep import P, RefEngine, RuntimeConfig
 from repro.data.cep_streams import StreamConfig, make_stream
 
 K = 8
-pattern = seq_pattern([0, 1, 2], window=4.0,
-                      predicates=chain_predicates([0, 1, 2], theta=-0.3))
+pattern = (P.seq(0, 1, 2)
+           .where(P.attr(0) < P.attr(1) - 0.3,
+                  P.attr(1) < P.attr(2) - 0.3)
+           .within(4.0))
 scfg = StreamConfig(n_types=3, n_chunks=60, chunk_cap=256,
                     base_rate=12.0, seed=17)
 
@@ -37,29 +39,27 @@ def tenant_streams():
     ]
 
 
-runner = FleetRunner(
-    pattern, K, planner="greedy",
-    policy_factory=lambda: make_policy("invariant", k=1, d=0.0),
-    engine_cfg=EngineConfig(b_cap=128, m_cap=1024))
-metrics = runner.run(stacked_streams(tenant_streams()))
+session = cep.open(
+    pattern, partitions=K, plan="order",
+    config=RuntimeConfig(buffer_capacity=128, match_capacity=1024,
+                         policy="invariant", policy_kw={"k": 1, "d": 0.0}))
+tel = session.run(tenant_streams())
 
-print(f"== fleet of {K} tenants, {metrics.chunks} chunks, "
-      f"{metrics.events} events ==")
-print(f"matches={metrics.full_matches}  replans={metrics.replans}  "
-      f"deployments={metrics.deployments}  "
-      f"migrating-partition-chunks={metrics.migration_partition_chunks}")
-print(f"engine {metrics.engine_time_s * 1e3:.0f} ms, "
-      f"control {metrics.control_time_s * 1e3:.0f} ms")
+print(f"== fleet of {K} tenants, {tel.chunks} chunks, "
+      f"{tel.events} events ==")
+print(f"matches={tel.matches}  replans={tel.replans}  "
+      f"deployments={tel.deployments}  "
+      f"migrating-partition-chunks={tel.migration_partition_chunks}")
+print(f"engine {tel.engine_time_s * 1e3:.0f} ms, "
+      f"control {tel.control_time_s * 1e3:.0f} ms")
 
-print(f"\n{'tenant':>6s} {'regime':>8s} {'matches':>8s} {'deploys':>8s} "
-      f"{'oracle':>8s}")
-oracle = [RefEngine(pattern).run(s).full_matches
+print(f"\n{'tenant':>6s} {'regime':>8s} {'matches':>8s} {'oracle':>8s}")
+oracle = [RefEngine(pattern.build()).run(s).full_matches
           for s in tenant_streams()]
 for p in range(K):
-    got = int(metrics.per_partition_matches[p])
+    got = int(tel.per_partition_matches[p])
     mark = "ok" if got == oracle[p] else "MISMATCH"
     print(f"{p:6d} {'traffic' if p % 2 == 0 else 'stocks':>8s} "
-          f"{got:8d} {int(metrics.per_partition_deployments[p]):8d} "
-          f"{oracle[p]:8d}  {mark}")
-assert metrics.per_partition_matches.tolist() == oracle
+          f"{got:8d} {oracle[p]:8d}  {mark}")
+assert tel.per_partition_matches.tolist() == oracle
 print("\nfleet == oracle on every partition")

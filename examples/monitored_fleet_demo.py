@@ -5,9 +5,9 @@ step — joins each chunk, updates per-partition statistics rings, and
 verifies each tenant's lowered invariant set (paper §3.3-§3.5).  The host
 reads back a single (K,) violation-flag vector per tick; it syncs
 statistics and re-runs the planner ONLY for tenants whose flag fired, so
-per-chunk host work scales with violations, not with fleet size.  Every
-deployment is two row writes (plan matrix + invariant matrix), never a
-recompile.  Match counts are cross-checked against the brute-force oracle.
+per-chunk host work scales with violations, not with fleet size.  The
+whole runtime is one ``repro.cep`` session opened with ``monitor=True``;
+match counts are cross-checked against the brute-force oracle.
 
     PYTHONPATH=src python examples/monitored_fleet_demo.py
 """
@@ -17,16 +17,16 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import EngineConfig, MonitoredFleetRunner
-from repro.core.decision import InvariantPolicy
-from repro.core.fleet import stacked_streams
-from repro.core.patterns import chain_predicates, seq_pattern
-from repro.core.ref_engine import RefEngine
+from repro import cep
+from repro.cep import P, RefEngine, RuntimeConfig
+
 from repro.data.cep_streams import StreamConfig, make_stream
 
 K = 8
-pattern = seq_pattern([0, 1, 2], window=4.0,
-                      predicates=chain_predicates([0, 1, 2], theta=-0.3))
+pattern = (P.seq(0, 1, 2)
+           .where(P.attr(0) < P.attr(1) - 0.3,
+                  P.attr(1) < P.attr(2) - 0.3)
+           .within(4.0))
 scfg = StreamConfig(n_types=3, n_chunks=60, chunk_cap=256,
                     base_rate=12.0, seed=17)
 
@@ -42,28 +42,28 @@ def tenant_streams():
     ]
 
 
-runner = MonitoredFleetRunner(
-    pattern, K, planner="greedy",
-    policy_factory=lambda: InvariantPolicy(k=1, d=0.0),
-    engine_cfg=EngineConfig(b_cap=128, m_cap=1024))
-metrics = runner.run(stacked_streams(tenant_streams()))
+session = cep.open(
+    pattern, partitions=K, plan="order", monitor=True,
+    config=RuntimeConfig(buffer_capacity=128, match_capacity=1024,
+                         policy="invariant", policy_kw={"k": 1, "d": 0.0}))
+tel = session.run(tenant_streams())
 
-print(f"== device-monitored fleet of {K} tenants, {metrics.chunks} chunks, "
-      f"{metrics.events} events ==")
-print(f"matches={metrics.full_matches}  violations={metrics.violations}  "
-      f"replans={metrics.replans}  deployments={metrics.deployments}")
-print(f"host statistic syncs: {metrics.host_syncs} "
-      f"(vs {metrics.chunks * K} for host-side monitoring = K x chunks)")
+print(f"== device-monitored fleet of {K} tenants, {tel.chunks} chunks, "
+      f"{tel.events} events ==")
+print(f"matches={tel.matches}  violations={tel.violations}  "
+      f"replans={tel.replans}  deployments={tel.deployments}")
+print(f"host statistic syncs: {tel.host_syncs} "
+      f"(vs {tel.chunks * K} for host-side monitoring = K x chunks)")
 print(f"last drift per tenant: "
-      f"{[f'{d:+.2f}' for d in metrics.last_drift]}")
+      f"{[f'{d:+.2f}' for d in tel.last_drift]}")
 
-print("\ntenant  matches  deployments")
+print("\ntenant  matches")
 for p in range(K):
-    print(f"{p:6d}  {metrics.per_partition_matches[p]:7d}  "
-          f"{metrics.per_partition_deployments[p]:11d}")
+    print(f"{p:6d}  {tel.per_partition_matches[p]:7d}")
 
-oracle = [RefEngine(pattern).run(s).full_matches for s in tenant_streams()]
-assert metrics.per_partition_matches.tolist() == oracle, (
+oracle = [RefEngine(pattern.build()).run(s).full_matches
+          for s in tenant_streams()]
+assert tel.per_partition_matches.tolist() == oracle, (
     "fleet disagrees with the brute-force oracle")
 print("\noracle cross-check: OK "
       "(per-tenant match counts == brute force, replans and all)")

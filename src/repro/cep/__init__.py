@@ -1,0 +1,41 @@
+"""``repro.cep`` — the public CEP runtime surface.
+
+One entry point, everything else configuration:
+
+    from repro import cep
+    from repro.cep import P, RuntimeConfig
+
+    pattern = (P.seq(0, 1, 2)
+               .where(P.attr(0) < P.attr(1) - 0.3,
+                      P.attr(1) < P.attr(2) - 0.3)
+               .within(4.0))
+
+    session = cep.open(pattern, partitions=8, plan="auto", monitor=True,
+                       config=RuntimeConfig(match_capacity=1024))
+    telemetry = session.run(streams)          # batch adaptive loop
+    counts = session.process(tid, ts, attr, keys, t0, t1)  # keyed serving
+
+The documented surface is exactly ``__all__``; CI asserts it.  ``RefEngine``
+is exported so downstream deployments can cross-check any session against
+the brute-force oracle, exactly as our own tests and examples do.
+"""
+
+from ..core.patterns import CompositePattern, Pattern  # noqa: F401
+from ..core.plans import OrderPlan, TreePlan  # noqa: F401
+from ..core.ref_engine import RefEngine  # noqa: F401
+from .config import RuntimeConfig  # noqa: F401
+from .dsl import P  # noqa: F401
+from .session import Session, Telemetry, open  # noqa: F401
+
+__all__ = [
+    "P",
+    "open",
+    "Session",
+    "Telemetry",
+    "RuntimeConfig",
+    "Pattern",
+    "CompositePattern",
+    "OrderPlan",
+    "TreePlan",
+    "RefEngine",
+]

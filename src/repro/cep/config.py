@@ -1,0 +1,98 @@
+"""Consolidated runtime configuration for the CEP facade.
+
+Before the facade, capacity/bucket/laplace/escalation knobs were scattered
+as constructor kwargs across ``core/engine.py`` (``EngineConfig``,
+``MonitoredEngine``), ``core/fleet.py`` (``FleetRunner`` /
+``MonitoredFleetRunner``) and ``serving/engine.py`` (the serving fronts).
+``RuntimeConfig`` is the single source of truth: every knob any of the
+eight legacy configurations accepted, with one name and one default, and
+adapters (``engine()``, ``policy_factory()``) that translate back to the
+internal structures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from ..core.decision import DecisionPolicy, make_policy
+from ..core.engine import EngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """All tunables of a CEP session, in one place.
+
+    Data plane
+    ----------
+    buffer_capacity: per-type ring-buffer rows (events of recent history).
+    match_capacity:  match-set rows; overflow beyond this triggers the
+                     escalation recount (``escalate_on_overflow``).
+    backend:         kernel backend override (None = auto: Pallas on TPU,
+                     jnp elsewhere).
+    chunk_capacity:  per-partition padded chunk rows for keyed-batch
+                     routing (``Session.process``); overflow is counted as
+                     back-pressure, never silently dropped.
+
+    Statistics
+    ----------
+    estimator_buckets: sliding-window length in chunks (host estimator and
+                       device monitor rings alike).
+    laplace:           additive smoothing for selectivity estimates (host
+                       estimator and device monitor snapshots alike).
+    sel_samples:       Monte-Carlo pairs sampled per chunk by the *host*
+                       estimator (device monitoring observes exhaustively).
+
+    Adaptation
+    ----------
+    policy:    reoptimizing decision function ``D`` — "invariant",
+               "threshold", "unconditional", "static", or None (plan once
+               from the uniform prior, never adapt).  Monitored sessions
+               require "invariant" (the only policy with a device
+               lowering).
+    policy_kw: kwargs for the policy (e.g. ``{"k": 1, "d": 0.0}``).
+    escalate_on_overflow / max_escalations: re-evaluate a chunk at the
+               next pow2 match capacity when a join truncated.
+    max_invariants / max_terms: static caps for the stacked lowered
+               invariant tensors (monitored sessions).  None = the
+               cold-start set's exact sizes — exact for the greedy/order
+               planner; pass explicit worst-case caps for tree plans.
+    seed:      RNG seed for the host estimator's selectivity sampling.
+    """
+
+    # data plane
+    buffer_capacity: int = 128
+    match_capacity: int = 256
+    backend: Optional[str] = None
+    chunk_capacity: int = 512
+    # statistics
+    estimator_buckets: int = 16
+    laplace: float = 1.0
+    sel_samples: int = 64
+    # adaptation
+    policy: Optional[str] = "invariant"
+    policy_kw: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    escalate_on_overflow: bool = True
+    max_escalations: int = 4
+    max_invariants: Optional[int] = None
+    max_terms: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.match_capacity < self.buffer_capacity:
+            raise ValueError("match_capacity must be >= buffer_capacity")
+        if self.policy not in (None, "static", "unconditional", "threshold",
+                               "invariant"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+    # -- adapters to the internal structures --------------------------------
+
+    def engine(self) -> EngineConfig:
+        return EngineConfig(b_cap=self.buffer_capacity,
+                            m_cap=self.match_capacity,
+                            backend=self.backend)
+
+    def policy_factory(self) -> Optional[Callable[[], DecisionPolicy]]:
+        if self.policy is None:
+            return None
+        return lambda: make_policy(self.policy, **self.policy_kw)

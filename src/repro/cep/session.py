@@ -1,0 +1,453 @@
+"""The unified CEP runtime facade: one ``Session``, everything else config.
+
+The paper's thesis is that a single adaptive mechanism serves *any* plan
+family; this module is that thesis applied to our own public API.  The
+pre-facade surface encoded "plan kind", "monitored", and "fleet" as a
+ladder of eight classes; here they are three arguments:
+
+    session = cep.open(pattern, partitions=K,
+                       plan="order" | "tree" | "auto",
+                       monitor=True | False,
+                       config=RuntimeConfig(...))
+
+* ``partitions``: K = 1 is simply a fleet of one — the data plane is always
+  the vmapped fleet executor, so scaling out never changes semantics.
+* ``plan``: the plan family ("auto" compares the two planners' cold-start
+  costs under the uniform prior and picks the cheaper family).
+* ``monitor``: where invariant verification runs — ``False`` keeps the
+  decision policy on the host (statistics sync per chunk), ``True`` fuses
+  the statistics rings and lowered invariant sets into the compiled step
+  (host work ∝ violations, §3.3–§3.5).
+
+Two control planes hang off one session, both driving the same compiled
+data plane:
+
+* **Batch** — ``run(stream)`` consumes a whole chunk stream through the
+  adaptive loop (Algorithm 1 per partition: estimator → decision policy →
+  planner → [36] migration split) and returns a ``Telemetry``.
+* **Incremental** — ``process(...)`` / ``step(...)`` / ``deploy(...)``
+  advance the session one keyed batch or pre-stacked chunk at a time
+  (serving style: immediate plan swaps, cumulative counters).
+
+OR-composites (``P.or_``) decompose into one sub-session per branch;
+detection is the union of branch detections, so counters aggregate as
+per-branch sums and ``telemetry().branches`` keeps the breakdown.
+
+The legacy ladder (``FleetRunner``, ``MonitoredCEPFleetServingEngine``, …)
+still implements the mechanics; this facade owns configuration and
+composition, and the ladder's public constructors now carry
+``DeprecationWarning``s pointing here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.adaptation import make_planner
+from ..core.compat import legacy_ok
+from ..core.engine import Chunk
+from ..core.fleet import (FleetChunk, FleetMetrics, FleetRunner,
+                          MonitoredFleetRunner, stack_chunks, stacked_streams)
+from ..core.patterns import CompositePattern, Pattern
+from ..core.plans import plan_cost
+from ..core.stats import uniform_stat
+from ..data.cep_streams import ChunkRecord
+from ..serving.engine import (CEPFleetServingEngine,
+                              MonitoredCEPFleetServingEngine)
+from .config import RuntimeConfig
+from .dsl import as_pattern
+
+__all__ = ["Session", "Telemetry", "open"]
+
+_COUNTERS = (
+    "chunks", "events", "matches", "replans", "deployments", "violations",
+    "host_syncs", "overflow", "dropped", "neg_rejected",
+    "closure_expansions", "escalations", "migration_partition_chunks",
+)
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Uniform counter snapshot across both control planes.
+
+    ``matches`` is the exactly-once full-match total (summed over branches
+    for OR-composites); ``per_partition_matches`` keeps the (K,) split.
+    ``violations``/``host_syncs`` are nonzero only for monitored sessions;
+    ``dropped`` counts keyed-batch routing overflow (back-pressure).
+    ``events`` is maintained by ``run`` and ``process`` — ``step`` skips
+    it to avoid a per-tick device sync.
+    """
+
+    partitions: int = 1
+    chunks: int = 0
+    events: int = 0
+    matches: int = 0
+    per_partition_matches: Optional[np.ndarray] = None
+    replans: int = 0
+    deployments: int = 0
+    violations: int = 0
+    host_syncs: int = 0
+    overflow: int = 0
+    dropped: int = 0
+    neg_rejected: int = 0
+    closure_expansions: int = 0
+    escalations: int = 0
+    migration_partition_chunks: int = 0
+    engine_time_s: float = 0.0
+    control_time_s: float = 0.0
+    last_drift: Optional[np.ndarray] = None
+    branches: Optional[Tuple["Telemetry", ...]] = None
+
+    def merge(self, other: "Telemetry") -> "Telemetry":
+        """Accumulate ``other`` into self (counters add, arrays add)."""
+        for f in _COUNTERS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.engine_time_s += other.engine_time_s
+        self.control_time_s += other.control_time_s
+        if other.per_partition_matches is not None:
+            if self.per_partition_matches is None:
+                self.per_partition_matches = np.zeros(
+                    other.per_partition_matches.shape, np.int64)
+            self.per_partition_matches = (
+                self.per_partition_matches + other.per_partition_matches)
+        if other.last_drift is not None:
+            self.last_drift = other.last_drift
+        return self
+
+
+def _from_fleet_metrics(m: FleetMetrics, k: int) -> Telemetry:
+    return Telemetry(
+        partitions=k,
+        chunks=m.chunks,
+        events=m.events,
+        matches=m.full_matches,
+        per_partition_matches=(None if m.per_partition_matches is None
+                               else m.per_partition_matches.copy()),
+        replans=m.replans,
+        deployments=m.deployments,
+        violations=m.violations,
+        host_syncs=m.host_syncs,
+        overflow=m.overflow,
+        neg_rejected=m.neg_rejected,
+        closure_expansions=m.closure_expansions,
+        escalations=m.escalations,
+        migration_partition_chunks=m.migration_partition_chunks,
+        engine_time_s=m.engine_time_s,
+        control_time_s=m.control_time_s,
+        last_drift=(None if m.last_drift is None else m.last_drift.copy()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stream normalization
+# ---------------------------------------------------------------------------
+
+
+Stream = Union[Iterable[ChunkRecord], Iterable[FleetChunk],
+               Sequence[Iterable[ChunkRecord]]]
+
+
+def _wrap_single(records: Iterable[ChunkRecord]) -> Iterable[FleetChunk]:
+    for r in records:
+        yield FleetChunk(stack_chunks([r.chunk]), r.t0, r.t1)
+
+
+def _normalize_stream(stream: Stream, k: int) -> Iterable[FleetChunk]:
+    """Accept the three natural stream shapes and yield ``FleetChunk``s.
+
+    * an iterable of ``ChunkRecord`` (single-partition session, K = 1);
+    * an iterable of ``FleetChunk`` (already stacked);
+    * a sequence of K per-partition ``ChunkRecord`` iterables (zipped on a
+      shared chunk clock, as ``core.fleet.stacked_streams``).
+    """
+    if isinstance(stream, (list, tuple)) and stream \
+            and not isinstance(stream[0], (ChunkRecord, FleetChunk)):
+        if len(stream) != k:
+            raise ValueError(
+                f"got {len(stream)} partition streams for {k} partitions")
+        return stacked_streams(stream)
+    it = iter(stream)
+    try:
+        first = next(it)
+    except StopIteration:
+        return iter(())
+    rest = itertools.chain([first], it)
+    if isinstance(first, FleetChunk):
+        return rest
+    if isinstance(first, ChunkRecord):
+        if k != 1:
+            raise ValueError(
+                "a bare ChunkRecord stream feeds a single partition; pass "
+                f"{k} per-partition streams (or FleetChunks) for K={k}")
+        return _wrap_single(rest)
+    raise TypeError(f"cannot interpret stream element "
+                    f"{type(first).__name__} as chunked input")
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+
+def _resolve_plan_kind(pattern: Pattern, plan: str) -> str:
+    if plan in ("order", "tree"):
+        return plan
+    if plan != "auto":
+        raise ValueError(f"plan must be 'order', 'tree' or 'auto'; "
+                         f"got {plan!r}")
+    stat0 = uniform_stat(pattern.n)
+    order_plan, _ = make_planner("greedy")(pattern, stat0)
+    tree_plan, _ = make_planner("zstream")(pattern, stat0)
+    c_order = plan_cost(order_plan, stat0, pattern.is_sequence)
+    c_tree = plan_cost(tree_plan, stat0, pattern.is_sequence)
+    return "order" if c_order <= c_tree else "tree"
+
+
+class Session:
+    """One CEP runtime: pattern + partitions + plan family + monitoring.
+
+    Construct via :func:`repro.cep.open`.  The session is lazy: the
+    incremental serving plane (compiled fleet state, plan matrix, monitor
+    rings) is built on first ``process``/``step``/``deploy``; ``run`` spins
+    up a fresh adaptive loop per call and folds its metrics into the
+    session telemetry.
+    """
+
+    def __init__(self, pattern, *, partitions: int = 1, plan: str = "auto",
+                 monitor: bool = False,
+                 config: Optional[RuntimeConfig] = None):
+        if partitions < 1:
+            raise ValueError("partitions must be >= 1")
+        self.config = config or RuntimeConfig()
+        self.k = int(partitions)
+        self.monitor = bool(monitor)
+        if self.monitor and self.config.policy != "invariant":
+            raise ValueError(
+                "monitored sessions verify lowered invariant sets on "
+                "device; config.policy must be 'invariant' "
+                f"(got {self.config.policy!r})")
+        self.pattern = as_pattern(pattern)
+        self._tel = Telemetry(partitions=self.k)
+        if isinstance(self.pattern, CompositePattern):
+            self.branches: Tuple["Session", ...] = tuple(
+                Session(b, partitions=partitions, plan=plan, monitor=monitor,
+                        config=self.config) for b in self.pattern.branches)
+            self.plan_kind: Union[str, Tuple[str, ...]] = tuple(
+                b.plan_kind for b in self.branches)
+            self._serving = None
+            return
+        self.branches = ()
+        self.plan_kind = _resolve_plan_kind(self.pattern, plan)
+        self.planner_name = ("greedy" if self.plan_kind == "order"
+                             else "zstream")
+        self._serving: Optional[CEPFleetServingEngine] = None
+
+    # -- composite helpers --------------------------------------------------
+
+    @property
+    def is_composite(self) -> bool:
+        return bool(self.branches)
+
+    # -- batch control plane ------------------------------------------------
+
+    def _make_runner(self):
+        cfg = self.config
+        common = dict(
+            planner=self.planner_name,
+            policy_factory=cfg.policy_factory(),
+            engine_cfg=cfg.engine(),
+            estimator_buckets=cfg.estimator_buckets,
+            laplace=cfg.laplace,
+            escalate_on_overflow=cfg.escalate_on_overflow,
+            max_escalations=cfg.max_escalations,
+            seed=cfg.seed,
+        )
+        with legacy_ok():
+            if self.monitor:
+                return MonitoredFleetRunner(
+                    self.pattern, self.k, max_inv=cfg.max_invariants,
+                    max_terms=cfg.max_terms, **common)
+            return FleetRunner(self.pattern, self.k,
+                               sel_samples=cfg.sel_samples, **common)
+
+    def run(self, stream: Stream) -> Telemetry:
+        """Consume a chunk stream through the adaptive loop (Algorithm 1
+        per partition) and return this run's ``Telemetry``.
+
+        For OR-composites the stream is materialized once and each branch
+        runs its own adaptive loop over it; counters aggregate as sums and
+        ``telemetry.branches`` keeps the per-branch breakdown.
+        """
+        if self.is_composite:
+            chunks = list(_normalize_stream(stream, self.k))
+            parts = [b.run(chunks) for b in self.branches]
+            tel = Telemetry(partitions=self.k)
+            for p in parts:
+                tel.merge(p)
+            # chunks/events are shared input, not per-branch work
+            tel.chunks = parts[0].chunks if parts else 0
+            tel.events = parts[0].events if parts else 0
+            tel.branches = tuple(parts)
+            self._tel.merge(dataclasses.replace(tel, branches=None))
+            return tel
+        runner = self._make_runner()
+        metrics = runner.run(_normalize_stream(stream, self.k))
+        tel = _from_fleet_metrics(metrics, self.k)
+        self._tel.merge(tel)
+        return tel
+
+    # -- incremental (serving) control plane --------------------------------
+
+    def _ensure_serving(self) -> CEPFleetServingEngine:
+        if self._serving is None:
+            cfg = self.config
+            with legacy_ok():
+                if self.monitor:
+                    self._serving = MonitoredCEPFleetServingEngine(
+                        self.pattern, self.k, engine_cfg=cfg.engine(),
+                        kind=self.plan_kind, chunk_cap=cfg.chunk_capacity,
+                        planner=self.planner_name, policy_kw=cfg.policy_kw,
+                        monitor_buckets=cfg.estimator_buckets,
+                        max_inv=cfg.max_invariants,
+                        max_terms=cfg.max_terms, laplace=cfg.laplace)
+                else:
+                    plan0, _ = make_planner(self.planner_name)(
+                        self.pattern, uniform_stat(self.pattern.n))
+                    self._serving = CEPFleetServingEngine(
+                        self.pattern, self.k, plan0, cfg.engine(),
+                        self.plan_kind, cfg.chunk_capacity,
+                        laplace=cfg.laplace)
+        return self._serving
+
+    def step(self, chunk: Chunk, t0: float, t1: float) -> np.ndarray:
+        """Advance the fleet one tick over an already-stacked chunk.
+
+        ``chunk`` fields carry a leading K axis (a bare single-partition
+        ``Chunk`` is accepted when K = 1).  Returns this tick's
+        per-partition full-match counts.  Monitored sessions also run the
+        violation → sync → replan → row-deploy control loop inside the
+        call.  ``telemetry().events`` is not updated here — counting the
+        valid mask would cost one extra device→host sync per tick; use
+        ``process``/``run`` when event totals matter.
+        """
+        if self.is_composite:
+            self._tel.chunks += 1
+            return sum(b.step(chunk, t0, t1) for b in self.branches)
+        eng = self._ensure_serving()
+        if chunk.type_id.ndim == 1:
+            if self.k != 1:
+                raise ValueError("unstacked chunk on a multi-partition "
+                                 "session; stack K per-partition chunks")
+            chunk = stack_chunks([chunk])
+        self._tel.chunks += 1
+        return eng.process_chunk(chunk, float(t0), float(t1))
+
+    def process(self, type_id, ts, attr, keys, t0: float,
+                t1: float) -> np.ndarray:
+        """Route one keyed event batch (``key % K``) covering ``(t0, t1]``
+        and tick the fleet once; returns per-partition match counts."""
+        if self.is_composite:
+            self._tel.chunks += 1
+            self._tel.events += int(len(np.asarray(type_id)))
+            return sum(b.process(type_id, ts, attr, keys, t0, t1)
+                       for b in self.branches)
+        eng = self._ensure_serving()
+        self._tel.chunks += 1
+        self._tel.events += int(len(np.asarray(type_id)))
+        return eng.process_batch(type_id, ts, attr, keys,
+                                 float(t0), float(t1))
+
+    def deploy(self, partition: int, plan) -> None:
+        """Deploy an evaluation plan for one partition: a stacked-matrix
+        row write, never a recompile (§2.2 cheap deployment).
+
+        On a monitored session the partition's invariant row keeps
+        guarding the last *planner* output (deciding conditions exist only
+        for planner-generated plans); a later violation re-runs the
+        planner and overrides the manual plan."""
+        if self.is_composite:
+            raise ValueError("deploy on a composite session is ambiguous; "
+                             "use session.branches[i].deploy(...)")
+        self._ensure_serving().deploy_plan(partition, plan)
+        self._tel.deployments += 1
+
+    def reset(self) -> None:
+        """Clear stream state (ring buffers, monitor rings, counters) while
+        keeping compiled programs and deployed plans."""
+        if self.is_composite:
+            for b in self.branches:
+                b.reset()
+        elif self._serving is not None:
+            self._serving.reset()
+        self._tel = Telemetry(partitions=self.k)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def _serving_telemetry(self) -> Telemetry:
+        eng = self._serving
+        tel = Telemetry(partitions=self.k)
+        if eng is None:
+            return tel
+        tel.matches = int(eng.matches.sum())
+        tel.per_partition_matches = eng.matches.copy()
+        tel.overflow = int(eng.overflow.sum())
+        tel.neg_rejected = int(eng.neg_rejected.sum())
+        tel.closure_expansions = int(eng.closure_expansions.sum())
+        tel.dropped = int(eng.dropped)
+        if self.monitor:
+            tel.violations = int(eng.violations.sum())
+            tel.replans = int(eng.replans.sum())
+            tel.host_syncs = int(eng.host_syncs)
+            tel.last_drift = eng.last_drift.copy()
+        return tel
+
+    def telemetry(self) -> Telemetry:
+        """Cumulative session telemetry across both control planes."""
+        if self.is_composite:
+            parts = tuple(b.telemetry() for b in self.branches)
+            tel = Telemetry(partitions=self.k)
+            for p in parts:
+                tel.merge(p)
+            # Shared input is counted once by the composite itself (run,
+            # step, and process all maintain self._tel), not per branch.
+            tel.chunks = self._tel.chunks
+            tel.events = self._tel.events
+            tel.branches = parts
+            return tel
+        tel = Telemetry(partitions=self.k)
+        tel.merge(self._tel)
+        tel.merge(self._serving_telemetry())
+        return tel
+
+
+def open(pattern, *, partitions: int = 1, plan: str = "auto",
+         monitor: bool = False,
+         config: Optional[RuntimeConfig] = None) -> Session:
+    """Open a CEP session — the single entry point to the runtime.
+
+    Parameters
+    ----------
+    pattern:    a ``P.seq``/``P.and_``/``P.or_`` builder, a ``Pattern``, or
+                a ``CompositePattern``.
+    partitions: K independent stream partitions sharing one compiled,
+                vmapped data plane (K = 1 is a fleet of one).
+    plan:       evaluation-plan family — "order" (lazy-NFA-style
+                permutations, greedy planner), "tree" (ZStream-style join
+                trees, dynamic-programming planner), or "auto" (cheaper
+                cold-start cost under the uniform prior).
+    monitor:    ``True`` fuses statistics rings + lowered invariant
+                verification into the compiled step (host work scales with
+                violations) on *both* control planes.  ``False`` evaluates
+                the decision policy on the host each chunk of a ``run``;
+                the incremental plane (``process``/``step``) is then
+                static — plans change only via ``deploy`` — because
+                host-side per-batch estimation would reintroduce the
+                O(K·stats) sync the monitored path exists to avoid.
+    config:     a :class:`RuntimeConfig`; defaults are production-shaped.
+    """
+    return Session(pattern, partitions=partitions, plan=plan,
+                   monitor=monitor, config=config)

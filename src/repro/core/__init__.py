@@ -1,6 +1,12 @@
 """The paper's contribution: adaptive CEP with invariant-based
 reoptimization decisions.
 
+This package is the *implementation* layer; the public runtime surface is
+the ``repro.cep`` facade (pattern DSL + ``Session`` + ``RuntimeConfig``),
+and the legacy control-plane entry points here (``make_engine``,
+``MonitoredEngine``, ``fleet.FleetRunner``, …) now emit
+``DeprecationWarning``s pointing at it.
+
 Control plane: instrumented plan generators (``greedy``, ``zstream``),
 invariant machinery (``invariants``), decision policies (``decision``),
 statistics estimation (``stats``), the detection-adaptation loop

@@ -561,13 +561,23 @@ class TreeEngine:
                              jnp.float32(born_lo), jnp.float32(born_hi))
 
 
-def make_engine(kind: str, pattern: Pattern,
-                cfg: EngineConfig = EngineConfig()):
+def _make_engine(kind: str, pattern: Pattern,
+                 cfg: EngineConfig = EngineConfig()):
     if kind == "order":
         return OrderEngine(pattern, cfg)
     if kind == "tree":
         return TreeEngine(pattern, cfg)
     raise ValueError(f"unknown engine kind {kind!r}")
+
+
+def make_engine(kind: str, pattern: Pattern,
+                cfg: EngineConfig = EngineConfig()):
+    """Deprecated: the ``repro.cep`` facade selects the plan family via
+    ``cep.open(..., plan="order"|"tree"|"auto")``."""
+    from .compat import warn_legacy
+
+    warn_legacy("make_engine")
+    return _make_engine(kind, pattern, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -624,7 +634,10 @@ class MonitoredEngine:
     def __init__(self, kind: str, pattern: Pattern,
                  cfg: EngineConfig = EngineConfig(),
                  monitor_buckets: int = 16, laplace: float = 1.0):
-        self.base = make_engine(kind, pattern, cfg)
+        from .compat import warn_legacy
+
+        warn_legacy("MonitoredEngine")
+        self.base = _make_engine(kind, pattern, cfg)
         self.kind = kind
         self.pattern = pattern
         self.cfg = cfg

@@ -342,12 +342,16 @@ class FleetRunner:
         engine_cfg: EngineConfig = EngineConfig(),
         estimator_buckets: int = 16,
         sel_samples: int = 64,
+        laplace: float = 1.0,
         escalate_on_overflow: bool = True,
         max_escalations: int = 4,
         seed: int = 0,
     ):
         from .adaptation import make_planner
+        from .compat import warn_legacy
 
+        if type(self) is FleetRunner:
+            warn_legacy("FleetRunner")
         self.pattern = pattern
         self.k = int(k)
         planner = planner or "greedy"
@@ -355,7 +359,9 @@ class FleetRunner:
         self.planner = make_planner(planner)
         kind = "order" if planner == "greedy" else "tree"
         self.engine_cfg = engine_cfg
-        self.fleet = FleetEngine(kind, pattern, k, engine_cfg)
+        self.laplace = float(laplace)
+        self.fleet = FleetEngine(kind, pattern, k, engine_cfg,
+                                 monitor_laplace=laplace)
         # Overflow escalation mirrors AdaptiveRunner: a truncated join may
         # have dropped matches, so the chunk is re-evaluated with the next
         # pow2 match-set capacity (shared by the whole fleet — the stacked
@@ -365,7 +371,7 @@ class FleetRunner:
         self._fleets = {engine_cfg.m_cap: self.fleet}
         self._active_fleet = self.fleet
         self.estimator = FleetEstimator(
-            k, pattern.n, num_buckets=estimator_buckets)
+            k, pattern.n, num_buckets=estimator_buckets, laplace=laplace)
         self.policies: List[Optional[DecisionPolicy]] = [
             policy_factory() if policy_factory else None for _ in range(k)]
         self.sel_samples = sel_samples
@@ -413,7 +419,8 @@ class FleetRunner:
             self._fleets[cap] = FleetEngine(
                 self.fleet.kind, self.pattern, self.k,
                 EngineConfig(b_cap=self.engine_cfg.b_cap, m_cap=cap,
-                             backend=self.engine_cfg.backend))
+                             backend=self.engine_cfg.backend),
+                monitor_laplace=self.laplace)
         return self._fleets[cap]
 
     def _deploy(self, p: int, new_plan, t0: float, m: FleetMetrics) -> None:
@@ -629,14 +636,19 @@ class MonitoredFleetRunner(FleetRunner):
                  estimator_buckets: int = 16,
                  max_inv: Optional[int] = None,
                  max_terms: Optional[int] = None,
+                 laplace: float = 1.0,
                  escalate_on_overflow: bool = True,
                  max_escalations: int = 4, seed: int = 0):
+        from .compat import warn_legacy
+
+        warn_legacy("MonitoredFleetRunner")
         policy_factory = policy_factory or (
             lambda: InvariantPolicy(k=1, d=0.0))
         super().__init__(pattern, k, planner=planner,
                          policy_factory=policy_factory,
                          engine_cfg=engine_cfg,
                          estimator_buckets=estimator_buckets,
+                         laplace=laplace,
                          escalate_on_overflow=escalate_on_overflow,
                          max_escalations=max_escalations, seed=seed)
         for pol in self.policies:

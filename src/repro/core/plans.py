@@ -47,15 +47,14 @@ class Expr:
             v *= float(stat.sel[i, j])
         return self.const_add + v
 
-    def __str__(self) -> str:  # pragma: no cover - debugging aid
+    def __str__(self) -> str:
         parts = []
         if self.const_add:
             parts.append(f"{self.const_add:.4g}")
-        term = "*".join(
-            [f"{self.scale:g}"] if self.scale != 1.0 else []
-            + [f"r{i}" for i in self.rate_idx]
-            + [f"s{i}{j}" for i, j in self.sel_pairs]
-        ) or "1"
+        factors = [f"{self.scale:g}"] if self.scale != 1.0 else []
+        factors += [f"r{i}" for i in self.rate_idx]
+        factors += [f"s{i}{j}" for i, j in self.sel_pairs]
+        term = "*".join(factors) or "1"
         parts.append(term)
         return " + ".join(parts)
 

@@ -114,8 +114,14 @@ class CEPFleetServingEngine:
 
     def __init__(self, pattern: Pattern, k: int, plans,
                  engine_cfg: EngineConfig = EngineConfig(),
-                 kind: str = "order", chunk_cap: int = 512):
-        self.fleet = FleetEngine(kind, pattern, k, engine_cfg)
+                 kind: str = "order", chunk_cap: int = 512,
+                 laplace: float = 1.0):
+        from ..core.compat import warn_legacy
+
+        if type(self) is CEPFleetServingEngine:
+            warn_legacy("CEPFleetServingEngine")
+        self.fleet = FleetEngine(kind, pattern, k, engine_cfg,
+                                 monitor_laplace=laplace)
         self.k = k
         self.chunk_cap = chunk_cap
         self.state = self.fleet.init_state()
@@ -126,6 +132,15 @@ class CEPFleetServingEngine:
         self.neg_rejected = np.zeros(k, np.int64)
         self.closure_expansions = np.zeros(k, np.int64)
         self.overflow = np.zeros(k, np.int64)
+        self.dropped = 0
+
+    def reset(self) -> None:
+        """Clear stream state and counters; compiled programs and deployed
+        plan rows survive (a reset is a fresh stream, not a fresh fleet)."""
+        self.state = self.fleet.init_state()
+        for arr in (self.matches, self.neg_rejected,
+                    self.closure_expansions, self.overflow):
+            arr[:] = 0
         self.dropped = 0
 
     def deploy_plan(self, partition: int, plan) -> None:
@@ -140,15 +155,26 @@ class CEPFleetServingEngine:
         return chunk
 
     def _accumulate(self, res) -> np.ndarray:
-        full = np.asarray(res.full_matches, np.int64)
+        # One device→host transfer for all four counters: per-array
+        # fetches cost a dispatch + transfer each and dominate the serving
+        # tick at small chunk sizes (the facade-overhead budget in
+        # benchmarks/fleet_bench.py watches this path).
+        full, neg, clo, ov = np.asarray(jnp.stack(
+            [res.full_matches, res.neg_rejected, res.closure_expansions,
+             res.overflow]), np.int64)
         self.matches += full
-        self.neg_rejected += np.asarray(res.neg_rejected, np.int64)
-        self.closure_expansions += np.asarray(
-            res.closure_expansions, np.int64)
+        self.neg_rejected += neg
+        self.closure_expansions += clo
         # Match-set truncation undercounts matches; surface it per
         # partition so undercounting is never silent.
-        self.overflow += np.asarray(res.overflow, np.int64)
+        self.overflow += ov
         return full
+
+    def process_chunk(self, chunk, t0: float, t1: float) -> np.ndarray:
+        """Tick the fleet once over an already-routed stacked chunk."""
+        self.state, res = self.fleet.process_chunk(
+            self.state, chunk, self._rows, t0, t1)
+        return self._accumulate(res)
 
     def process_batch(self, type_id, ts, attr, keys,
                       t0: float, t1: float) -> np.ndarray:
@@ -156,10 +182,8 @@ class CEPFleetServingEngine:
 
         Returns the per-partition full-match counts for this slice.
         """
-        chunk = self._route(type_id, ts, attr, keys)
-        self.state, res = self.fleet.process_chunk(
-            self.state, chunk, self._rows, t0, t1)
-        return self._accumulate(res)
+        return self.process_chunk(self._route(type_id, ts, attr, keys),
+                                  t0, t1)
 
 
 class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
@@ -190,7 +214,11 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
                  planner: str = "greedy", policy_kw: Optional[dict] = None,
                  monitor_buckets: int = 16,
                  max_inv: Optional[int] = None,
-                 max_terms: Optional[int] = None):
+                 max_terms: Optional[int] = None,
+                 laplace: float = 1.0):
+        from ..core.compat import warn_legacy
+
+        warn_legacy("MonitoredCEPFleetServingEngine")
         self.pattern = pattern
         self.planner = make_planner(planner)
         # The plan family must match the planner's output (an order vector
@@ -200,7 +228,8 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
                          for _ in range(k)]
         plan0, self._low, self._caps = prime_invariant_policies(
             pattern, self.planner, self.policies, (max_inv, max_terms))
-        super().__init__(pattern, k, plan0, engine_cfg, kind, chunk_cap)
+        super().__init__(pattern, k, plan0, engine_cfg, kind, chunk_cap,
+                         laplace=laplace)
         self.plans = [plan0] * k
         self.monitor = self.fleet.init_monitor(monitor_buckets)
         self.violations = np.zeros(k, np.int64)
@@ -208,20 +237,43 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
         self.host_syncs = 0
         self.last_drift = np.full(k, -np.inf, np.float32)
 
-    def process_batch(self, type_id, ts, attr, keys,
-                      t0: float, t1: float) -> np.ndarray:
-        """Route one keyed batch, tick the fused monitored fleet once, and
+    def reset(self) -> None:
+        """Clear stream state, monitor rings and counters; deployed plan
+        rows and the compiled invariant rows survive."""
+        super().reset()
+        self.monitor = self.fleet.init_monitor(self.monitor.counts.shape[1])
+        self.violations[:] = 0
+        self.replans[:] = 0
+        self.host_syncs = 0
+        self.last_drift = np.full(self.k, -np.inf, np.float32)
+
+    def deploy_plan(self, partition: int, plan) -> None:
+        """Manually deploy a plan row for one partition.
+
+        The partition's *invariant* row is intentionally left as the last
+        planner output's: deciding-condition sets exist only for plans the
+        instrumented planner generated, so the monitor keeps answering the
+        §3 question — "would re-running ``A`` change its choice?" — and a
+        violation re-establishes planner control (overwriting the manual
+        plan via the flag-triggered replan)."""
+        super().deploy_plan(partition, plan)
+        self.plans[partition] = plan
+
+    def process_chunk(self, chunk, t0: float, t1: float) -> np.ndarray:
+        """Tick the fused monitored fleet over an already-routed chunk and
         replan any partition whose invariant flag fired."""
-        chunk = self._route(type_id, ts, attr, keys)
         self.state, self.monitor, res, violated, drift, rates, sel = \
             self.fleet.process_chunk_monitored(
                 self.state, self.monitor, chunk, self._rows,
                 self._low.device(), t0, t1)
         full = self._accumulate(res)
-        self.last_drift = np.asarray(drift, np.float32)
+        # Coalesce the flag + drift readback into one transfer (the only
+        # extra per-tick host traffic device monitoring costs).
+        vd = np.asarray(jnp.stack([violated.astype(jnp.float32), drift]))
+        self.last_drift = vd[1].astype(np.float32)
 
         # Control plane: O(violations) — sync + replan flagged rows only.
-        fired = np.nonzero(np.asarray(violated))[0]
+        fired = np.nonzero(vd[0] > 0.5)[0]
         for p in fired:
             self.violations[p] += 1
             self.host_syncs += 1
@@ -231,7 +283,6 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
                 self.pattern, self.planner, self.policies[p],
                 self._low, p, stat, self._caps)
             if new_plan != self.plans[p]:
-                self.plans[p] = new_plan
-                self.deploy_plan(p, new_plan)
+                self.deploy_plan(p, new_plan)  # also records self.plans[p]
                 self.replans[p] += 1
         return full

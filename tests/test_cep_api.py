@@ -1,0 +1,170 @@
+"""The ``repro.cep`` public surface: ``__all__`` contract + DSL compiler.
+
+The DSL tests assert *structural equality* with the hand-assembled
+``core.patterns`` factories — the builder must compile to exactly the
+``Pattern`` the engine already understands, with thetas folded per the
+engine's op-code semantics (``a < b + θ`` / ``a > b − θ`` /
+``|a − b| <= θ``)."""
+
+import pytest
+
+from repro import cep
+from repro.cep import P, RuntimeConfig
+from repro.core.patterns import (
+    PRED_ABS_LE, PRED_GT, PRED_LT, CompositePattern, Operator, Predicate,
+    and_pattern, chain_predicates, kleene_pattern, neg_pattern, seq_pattern,
+)
+
+# The documented surface (README "Public API"); CI asserts this import
+# works and the sets match exactly.
+DOCUMENTED_SURFACE = {
+    "P", "open", "Session", "Telemetry", "RuntimeConfig",
+    "Pattern", "CompositePattern", "OrderPlan", "TreePlan", "RefEngine",
+}
+
+
+def test_public_surface_matches_documentation():
+    assert set(cep.__all__) == DOCUMENTED_SURFACE
+    for name in cep.__all__:
+        assert getattr(cep, name) is not None
+
+
+# ---------------------------------------------------------------------------
+# DSL -> Pattern compilation
+# ---------------------------------------------------------------------------
+
+
+def test_seq_dsl_equals_factory():
+    built = (P.seq(0, 1, 2)
+             .where(P.attr(0) < P.attr(1) - 0.3,
+                    P.attr(1) < P.attr(2) - 0.3)
+             .within(4.0).named("seq").build())
+    assert built == seq_pattern([0, 1, 2], 4.0,
+                                chain_predicates([0, 1, 2], theta=-0.3))
+
+
+def test_and_dsl_equals_factory():
+    built = (P.and_(3, 1, 2)
+             .where(P.attr(0) < P.attr(1) + 0.4,
+                    P.attr(1) < P.attr(2) + 0.4)
+             .within(15.0).named("and").build())
+    assert built == and_pattern([3, 1, 2], 15.0,
+                                chain_predicates([3, 1, 2], theta=0.4))
+
+
+def test_theta_folding_and_ops():
+    built = (P.seq(0, 1)
+             .where(P.attr(0, 1) > P.attr(1, 0) - 0.2,
+                    abs(P.attr(0) - P.attr(1)) <= 1.5)
+             .within(9.0).build())
+    assert built.predicates == (
+        Predicate(0, 1, PRED_GT, 1, 0, pytest.approx(0.2)),
+        Predicate(0, 1, PRED_ABS_LE, 0, 0, 1.5),
+    )
+    # shift on the left side folds with opposite sign: a - 1 < b  ⇔
+    # a < b + 1
+    lt = ((P.attr(0) - 1.0) < P.attr(1)).theta
+    assert lt == pytest.approx(1.0)
+
+
+def test_neg_dsl_equals_factory():
+    built = (P.seq(0, P.neg(2), 1)
+             .where(P.attr(0) < P.attr(1) + 0.5,
+                    P.neg_attr(0) > P.attr(0) + 1.0)
+             .within(20.0).named("neg").build())
+    want = neg_pattern(
+        [0, 1], 20.0, negated_type=2, negated_pos=1,
+        predicates=(Predicate(0, 1, PRED_LT, 0, 0, 0.5),),
+        negated_predicates=(Predicate(2, 0, PRED_GT, 0, 0, -1.0),))
+    assert built == want
+    assert built.operator is Operator.NEG
+
+
+def test_kleene_dsl_equals_factory():
+    built = (P.seq(0, P.kleene(1, bound=2), 2)
+             .within(20.0).attrs(1).named("kleene").build())
+    assert built == kleene_pattern([0, 1, 2], 20.0, kleene_pos=1,
+                                   kleene_bound=2)
+
+
+def test_or_composite_build():
+    b1 = P.seq(0, 1).within(5.0)
+    b2 = P.and_(2, 3).within(7.0)
+    comp = P.or_(b1, b2).named("either").build()
+    assert isinstance(comp, CompositePattern)
+    assert comp.branches == (b1.build(), b2.build())
+    assert comp.window == 7.0
+
+
+def test_n_attrs_inferred_from_predicates():
+    built = (P.seq(0, 1)
+             .where(P.attr(0, 2) < P.attr(1, 0)).within(5.0).build())
+    assert built.n_attrs == 3
+    assert P.seq(0, 1).within(5.0).build().n_attrs == 1
+
+
+def test_builders_are_immutable():
+    base = P.seq(0, 1).within(5.0)
+    refined = base.where(P.attr(0) < P.attr(1))
+    assert base.build().predicates == ()
+    assert len(refined.build().predicates) == 1
+
+
+# ---------------------------------------------------------------------------
+# DSL misuse surfaces as errors, never as a silently weaker pattern
+# ---------------------------------------------------------------------------
+
+
+def test_dsl_errors():
+    with pytest.raises(ValueError, match="window"):
+        P.seq(0, 1).build()
+    with pytest.raises(TypeError, match="strict"):
+        P.seq(0, 1).where(P.attr(0) <= P.attr(1)).within(5.0)
+    with pytest.raises(TypeError, match="two attribute references"):
+        P.attr(0) < 1.0
+    with pytest.raises(ValueError, match="distinct"):
+        P.seq(0, 0, 1).within(5.0).build()
+    with pytest.raises(ValueError, match="out of range"):
+        P.seq(0, 1).where(P.attr(2) < P.attr(0)).within(5.0).build()
+    with pytest.raises(ValueError, match="no negated element"):
+        P.seq(0, 1).where(P.neg_attr() < P.attr(0)).within(5.0).build()
+    with pytest.raises(ValueError, match="at most one negated"):
+        P.seq(0, P.neg(1), P.neg(2), 3).within(5.0).build()
+    with pytest.raises(ValueError, match="require P.seq"):
+        P.and_(0, P.neg(1), 2).within(5.0).build()
+    with pytest.raises(ValueError, match="cannot be combined"):
+        P.seq(0, P.neg(1), P.kleene(2), 3).within(5.0).build()
+    with pytest.raises(ValueError, match="at least two branches"):
+        P.or_(P.seq(0, 1).within(5.0))
+    with pytest.raises(ValueError, match="shifts"):
+        abs((P.attr(0) + 1.0) - P.attr(1)) <= 0.5
+    with pytest.raises(TypeError):
+        cep.open(42)
+    # Python rewrites a < b < c as (a < b) and (b < c): truth-testing the
+    # first Cond would silently drop it, so Cond refuses to be a boolean.
+    with pytest.raises(TypeError, match="chained"):
+        P.attr(0) < P.attr(1) < P.attr(2)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig consolidation
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_config_adapters():
+    cfg = RuntimeConfig(buffer_capacity=32, match_capacity=64,
+                        policy="threshold", policy_kw={"t": 0.25})
+    eng = cfg.engine()
+    assert (eng.b_cap, eng.m_cap) == (32, 64)
+    pol = cfg.policy_factory()()
+    assert pol.name == "threshold" and pol.t == 0.25
+    assert RuntimeConfig(policy=None).policy_factory() is None
+    with pytest.raises(ValueError, match="match_capacity"):
+        RuntimeConfig(buffer_capacity=128, match_capacity=64)
+    with pytest.raises(ValueError, match="unknown policy"):
+        RuntimeConfig(policy="bogus")
+    with pytest.raises(ValueError, match="invariant"):
+        cep.open(P.seq(0, 1).within(5.0), monitor=True,
+                 config=RuntimeConfig(policy="threshold"))
+    with pytest.raises(ValueError, match="order"):
+        cep.open(P.seq(0, 1).within(5.0), plan="sideways")

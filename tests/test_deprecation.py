@@ -1,0 +1,79 @@
+"""Legacy class-ladder shims: every pre-facade entry point warns, routes
+to the same machinery the facade drives, and behaves identically."""
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro import cep
+from repro.cep import OrderPlan, RuntimeConfig
+from repro.core.engine import EngineConfig, MonitoredEngine, make_engine
+from repro.core.fleet import FleetRunner, MonitoredFleetRunner, stacked_streams
+from repro.core.patterns import chain_predicates, seq_pattern
+from repro.data.cep_streams import StreamConfig, make_stream
+from repro.serving.engine import (CEPFleetServingEngine,
+                                  MonitoredCEPFleetServingEngine)
+
+PAT = seq_pattern([0, 1, 2], 4.0, chain_predicates([0, 1, 2], theta=-0.3))
+CFG = EngineConfig(b_cap=64, m_cap=512)
+
+
+def _one_warning(record):
+    msgs = [str(w.message) for w in record
+            if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1, msgs
+    assert "repro.cep" in msgs[0]
+
+
+def test_legacy_constructors_warn():
+    for ctor in (
+        lambda: make_engine("order", PAT, CFG),
+        lambda: MonitoredEngine("order", PAT, CFG),
+        lambda: FleetRunner(PAT, 2, engine_cfg=CFG),
+        lambda: MonitoredFleetRunner(PAT, 2, engine_cfg=CFG),
+        lambda: CEPFleetServingEngine(PAT, 2, OrderPlan((0, 1, 2)), CFG),
+        lambda: MonitoredCEPFleetServingEngine(PAT, 2, CFG),
+    ):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            ctor()
+        _one_warning(rec)
+
+
+def test_facade_is_warning_free():
+    """Internal construction through the facade must not surface the
+    ladder deprecation warnings to the user."""
+    scfg = StreamConfig(n_types=3, n_chunks=4, chunk_cap=64, base_rate=6.0,
+                        seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sess = cep.open(PAT, partitions=1, plan="order", monitor=True,
+                        config=RuntimeConfig(buffer_capacity=64,
+                                             match_capacity=512))
+        sess.run(make_stream("traffic", scfg))
+        sess.step(next(iter(make_stream("traffic", scfg))).chunk, 0.0, 1.0)
+
+
+def test_legacy_runner_equivalent_to_session():
+    """Shim equivalence: the deprecated FleetRunner and the facade produce
+    bit-identical per-partition counts on the same drifting streams."""
+    k = 2
+    scfg = StreamConfig(n_types=3, n_chunks=8, chunk_cap=128, base_rate=8.0)
+
+    def streams():
+        return [make_stream("stocks", dataclasses.replace(scfg, seed=41 + p))
+                for p in range(k)]
+
+    with pytest.warns(DeprecationWarning, match="repro.cep"):
+        legacy = FleetRunner(PAT, k, planner="greedy",
+                             engine_cfg=EngineConfig(b_cap=64, m_cap=1024))
+    legacy_m = legacy.run(stacked_streams(streams()))
+
+    sess = cep.open(PAT, partitions=k, plan="order",
+                    config=RuntimeConfig(buffer_capacity=64,
+                                         match_capacity=1024, policy=None))
+    tel = sess.run(streams())
+    assert (tel.per_partition_matches.tolist()
+            == legacy_m.per_partition_matches.tolist())
+    assert tel.matches == legacy_m.full_matches

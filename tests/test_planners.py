@@ -122,3 +122,16 @@ def test_deciding_conditions_hold_at_creation(rng):
         for _, conds in dcs:
             for c in conds:
                 assert c.margin(stat) >= -1e-9, str(c)
+
+
+def test_expr_str_keeps_factors_with_scale():
+    """Regression: operator precedence in ``Expr.__str__`` bound the
+    rate/sel factor lists into the ``else`` branch, so any expression with
+    ``scale != 1`` printed as the bare scale, dropping every factor."""
+    from repro.core.plans import Expr
+
+    e = Expr(rate_idx=(0, 2), sel_pairs=((0, 2),), scale=0.5)
+    assert str(e) == "0.5*r0*r2*s02"
+    assert str(Expr(rate_idx=(1,))) == "r1"
+    assert str(Expr(const_add=2.0, scale=3.0)) == "2 + 3"
+    assert str(Expr()) == "1"

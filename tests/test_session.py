@@ -1,0 +1,188 @@
+"""``cep.Session`` differentials: the facade must cover every legacy
+configuration bit-identically.
+
+The acceptance grid: plan ∈ {order, tree} × monitored ∈ {on, off} ×
+K ∈ {1, 4} — eight configurations that used to be eight classes.  For each,
+the session's per-partition match counts must equal (a) the legacy
+runner's, constructed with the same knobs and seed, and (b) the brute-force
+``ref_engine`` oracle.  OR-composite sessions must match the per-branch
+oracle sums end-to-end over drifting streams."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import cep
+from repro.cep import P, RefEngine, RuntimeConfig
+from repro.core.decision import InvariantPolicy, make_policy
+from repro.core.engine import EngineConfig
+from repro.core.fleet import FleetRunner, MonitoredFleetRunner, stacked_streams
+from repro.core.plans import OrderPlan
+from repro.data.cep_streams import StreamConfig, make_stream
+
+PATTERN = (P.seq(0, 1, 2)
+           .where(P.attr(0) < P.attr(1) - 0.3,
+                  P.attr(1) < P.attr(2) - 0.3)
+           .within(4.0))
+SCFG = StreamConfig(n_types=3, n_chunks=10, chunk_cap=128, base_rate=8.0)
+CONFIG = RuntimeConfig(buffer_capacity=64, match_capacity=1024,
+                       max_invariants=8, max_terms=16)
+
+
+def streams(k, seed=11, kind="traffic"):
+    return [make_stream(kind, dataclasses.replace(SCFG, seed=seed + p))
+            for p in range(k)]
+
+
+def oracle_counts(pattern, k, seed=11, kind="traffic"):
+    return [RefEngine(pattern).run(s).full_matches
+            for s in streams(k, seed, kind)]
+
+
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("monitored", [False, True])
+@pytest.mark.parametrize("plan", ["order", "tree"])
+def test_session_covers_legacy_grid(plan, monitored, k):
+    """One facade, eight legacy configurations: session == legacy == oracle."""
+    sess = cep.open(PATTERN, partitions=k, plan=plan, monitor=monitored,
+                    config=CONFIG)
+    tel = sess.run(streams(k))
+
+    planner = "greedy" if plan == "order" else "zstream"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        if monitored:
+            legacy = MonitoredFleetRunner(
+                PATTERN.build(), k, planner=planner,
+                policy_factory=lambda: InvariantPolicy(k=1, d=0.0),
+                engine_cfg=EngineConfig(b_cap=64, m_cap=1024),
+                max_inv=8, max_terms=16, seed=0)
+        else:
+            legacy = FleetRunner(
+                PATTERN.build(), k, planner=planner,
+                policy_factory=lambda: make_policy("invariant", k=1, d=0.0),
+                engine_cfg=EngineConfig(b_cap=64, m_cap=1024), seed=0)
+    legacy_m = legacy.run(stacked_streams(streams(k)))
+
+    oracle = oracle_counts(PATTERN.build(), k)
+    got = tel.per_partition_matches.tolist()
+    assert got == legacy_m.per_partition_matches.tolist()
+    assert got == oracle
+    assert tel.matches == sum(oracle)
+    assert tel.chunks == SCFG.n_chunks
+    if monitored:
+        assert tel.host_syncs == tel.violations  # O(violations) host work
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_or_composite_session_vs_oracle(k):
+    """Satellite: session-built OR patterns over drifting streams == oracle,
+    branch by branch and in aggregate, for K in {1, 4}."""
+    b_seq = PATTERN
+    b_and = (P.and_(0, 2)
+             .where(abs(P.attr(0) - P.attr(1)) <= 1.0)
+             .within(3.0))
+    sess = cep.open(P.or_(b_seq, b_and), partitions=k, plan="order",
+                    config=CONFIG)
+    tel = sess.run(streams(k, seed=23, kind="stocks"))
+
+    per_branch_oracle = [
+        np.asarray(oracle_counts(b.build(), k, seed=23, kind="stocks"))
+        for b in (b_seq, b_and)
+    ]
+    assert tel.branches is not None and len(tel.branches) == 2
+    for branch_tel, want in zip(tel.branches, per_branch_oracle):
+        assert branch_tel.per_partition_matches.tolist() == want.tolist()
+    total = sum(per_branch_oracle)
+    assert tel.per_partition_matches.tolist() == total.tolist()
+    assert tel.matches == int(total.sum())
+
+
+def test_or_composite_serving_plane(rng):
+    """Keyed batches through a composite session: aggregated counts match
+    the per-branch oracles on the routed sub-streams."""
+    k = 2
+    b1 = P.seq(0, 1).within(6.0)
+    b2 = P.seq(2, 1).within(6.0)
+    sess = cep.open(P.or_(b1, b2), partitions=k, plan="order",
+                    config=dataclasses.replace(CONFIG, policy=None))
+    n = 120
+    ts = np.sort(rng.uniform(0, 12, n)).astype(np.float32)
+    tid = rng.integers(0, 3, n).astype(np.int32)
+    attr = rng.normal(size=(n, 1)).astype(np.float32)
+    keys = rng.integers(0, 50, n)
+    got = np.zeros(k, np.int64)
+    for s in range(3):
+        t0, t1 = 4.0 * s, 4.0 * (s + 1)
+        m = (ts > t0) & (ts <= t1)
+        got += sess.process(tid[m], ts[m], attr[m], keys[m], t0, t1)
+    want = np.zeros(k, np.int64)
+    for b in (b1, b2):
+        for p in range(k):
+            ref = RefEngine(b.build())
+            sel = (keys % k) == p
+            for s in range(3):
+                t0, t1 = 4.0 * s, 4.0 * (s + 1)
+                m = sel & (ts > t0) & (ts <= t1)
+                want[p] += ref.process_chunk(tid[m], ts[m], attr[m],
+                                             t0, t1).full_matches
+    assert got.tolist() == want.tolist()
+    assert sess.telemetry().matches == int(want.sum())
+
+
+def test_session_step_deploy_reset():
+    """Incremental plane: step == run counts; deploy is a row write;
+    reset clears stream state but keeps deployed plans."""
+    sess = cep.open(PATTERN, partitions=1, plan="order",
+                    config=dataclasses.replace(CONFIG, policy=None))
+    sess.deploy(0, OrderPlan((2, 1, 0)))
+    recs = list(streams(1)[0])
+    total = np.zeros(1, np.int64)
+    for rec in recs:
+        total += sess.step(rec.chunk, rec.t0, rec.t1)
+    oracle = oracle_counts(PATTERN.build(), 1)
+    assert total.tolist() == oracle
+    tel = sess.telemetry()
+    assert tel.matches == oracle[0]
+    assert tel.chunks == len(recs)
+    assert tel.deployments == 1
+
+    sess.reset()
+    assert sess.telemetry().matches == 0
+    for rec in recs:
+        sess.step(rec.chunk, rec.t0, rec.t1)
+    assert sess.telemetry().matches == oracle[0]  # plans survived the reset
+
+
+def test_composite_mixed_plane_chunk_accounting():
+    """Composite telemetry counts shared input once, across both planes."""
+    comp = P.or_(P.seq(0, 1).within(5.0), P.seq(2, 1).within(5.0))
+    sess = cep.open(comp, partitions=1, plan="order",
+                    config=dataclasses.replace(CONFIG, policy=None))
+    recs = list(streams(1, seed=53)[0])
+    sess.run(recs)
+    for rec in recs[:3]:
+        sess.step(rec.chunk, rec.t0, rec.t1)
+    tel = sess.telemetry()
+    assert tel.chunks == len(recs) + 3
+    assert tel.events == sum(r.n_events for r in recs)  # step() skips events
+
+
+def test_monitored_serving_matches_plain(rng):
+    """Monitored incremental plane: fused monitoring + violation-triggered
+    replans never change which matches are counted."""
+    k = 4
+    plain = cep.open(PATTERN, partitions=k, plan="order",
+                     config=dataclasses.replace(CONFIG, policy=None))
+    mon = cep.open(PATTERN, partitions=k, plan="order", monitor=True,
+                   config=CONFIG)
+    for fc in stacked_streams(streams(k, seed=31)):
+        a = plain.step(fc.chunk, fc.t0, fc.t1)
+        b = mon.step(fc.chunk, fc.t0, fc.t1)
+        assert a.tolist() == b.tolist()
+    tel = mon.telemetry()
+    assert tel.matches == plain.telemetry().matches
+    assert tel.host_syncs == tel.violations
+    assert tel.last_drift is not None and tel.last_drift.shape == (k,)
