@@ -34,6 +34,24 @@ class RuntimeConfig:
                      routing (``Session.process``); overflow is counted as
                      back-pressure, never silently dropped.
 
+    Scale-out
+    ---------
+    superchunk: chunks rolled through one compiled ``lax.scan`` dispatch
+                (1 = classic per-chunk stepping).  The host surfaces only
+                at superchunk boundaries — or immediately after an
+                invariant flag / escalating overflow via the optimistic
+                prefix re-run — so detection, flags and replan points are
+                bit-identical for every value (``core/scan.py``).  Values
+                > 1 require device-side control: ``monitor=True`` for the
+                adaptive batch plane (a host decision policy would need a
+                per-chunk statistics sync, the exact O(K·stats) loop
+                superchunking removes).
+    mesh:       shard the K-partition axis across devices — ``None`` (no
+                sharding), ``"auto"`` (all local devices), an int device
+                count, or a 1-D ``jax.sharding.Mesh`` with a ``"cep"``
+                axis.  K must divide by the device count; a D=1 mesh runs
+                the identical ``shard_map`` code path on one device.
+
     Statistics
     ----------
     estimator_buckets: sliding-window length in chunks (host estimator and
@@ -65,6 +83,9 @@ class RuntimeConfig:
     match_capacity: int = 256
     backend: Optional[str] = None
     chunk_capacity: int = 512
+    # scale-out
+    superchunk: int = 1
+    mesh: Optional[Any] = None
     # statistics
     estimator_buckets: int = 16
     laplace: float = 1.0
@@ -81,6 +102,8 @@ class RuntimeConfig:
     def __post_init__(self):
         if self.match_capacity < self.buffer_capacity:
             raise ValueError("match_capacity must be >= buffer_capacity")
+        if self.superchunk < 1:
+            raise ValueError("superchunk must be >= 1")
         if self.policy not in (None, "static", "unconditional", "threshold",
                                "invariant"):
             raise ValueError(f"unknown policy {self.policy!r}")

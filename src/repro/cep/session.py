@@ -265,12 +265,23 @@ class Session:
             escalate_on_overflow=cfg.escalate_on_overflow,
             max_escalations=cfg.max_escalations,
             seed=cfg.seed,
+            mesh=cfg.mesh,
         )
         with legacy_ok():
             if self.monitor:
                 return MonitoredFleetRunner(
                     self.pattern, self.k, max_inv=cfg.max_invariants,
-                    max_terms=cfg.max_terms, **common)
+                    max_terms=cfg.max_terms, superchunk=cfg.superchunk,
+                    **common)
+            if cfg.superchunk > 1:
+                # The host decision policy estimates statistics every
+                # chunk — the exact O(K·stats) host loop superchunking
+                # exists to remove.  Device-resident monitoring is the
+                # scan-compatible control plane.
+                raise ValueError(
+                    "superchunk > 1 on the adaptive batch plane requires "
+                    "monitor=True (host policies sync statistics per "
+                    "chunk)")
             return FleetRunner(self.pattern, self.k,
                                sel_samples=cfg.sel_samples, **common)
 
@@ -313,14 +324,16 @@ class Session:
                         planner=self.planner_name, policy_kw=cfg.policy_kw,
                         monitor_buckets=cfg.estimator_buckets,
                         max_inv=cfg.max_invariants,
-                        max_terms=cfg.max_terms, laplace=cfg.laplace)
+                        max_terms=cfg.max_terms, laplace=cfg.laplace,
+                        superchunk=cfg.superchunk, mesh=cfg.mesh)
                 else:
                     plan0, _ = make_planner(self.planner_name)(
                         self.pattern, uniform_stat(self.pattern.n))
                     self._serving = CEPFleetServingEngine(
                         self.pattern, self.k, plan0, cfg.engine(),
                         self.plan_kind, cfg.chunk_capacity,
-                        laplace=cfg.laplace)
+                        laplace=cfg.laplace, superchunk=cfg.superchunk,
+                        mesh=cfg.mesh)
         return self._serving
 
     def step(self, chunk: Chunk, t0: float, t1: float) -> np.ndarray:
@@ -345,6 +358,26 @@ class Session:
             chunk = stack_chunks([chunk])
         self._tel.chunks += 1
         return eng.process_chunk(chunk, float(t0), float(t1))
+
+    def step_superchunk(self, chunks: Sequence[Chunk],
+                        edges: Sequence[Tuple[float, float]]) -> np.ndarray:
+        """Advance the fleet over a sequence of stacked chunks with
+        ``config.superchunk`` chunks per compiled dispatch.
+
+        Bit-identical to looping :meth:`step` (monitored sessions re-run a
+        window prefix when a flag fires mid-window, so replans still
+        deploy on the very next chunk); the host round-trips once per
+        superchunk instead of once per chunk.  Returns the per-chunk
+        ``(len(chunks), K)`` full-match counts.  Like ``step``, event
+        totals are not maintained here.
+        """
+        if self.is_composite:
+            self._tel.chunks += len(chunks)
+            return sum(b.step_superchunk(chunks, edges)
+                       for b in self.branches)
+        eng = self._ensure_serving()
+        self._tel.chunks += len(chunks)
+        return eng.process_superchunk(chunks, edges)
 
     def process(self, type_id, ts, attr, keys, t0: float,
                 t1: float) -> np.ndarray:
@@ -426,7 +459,9 @@ class Session:
 
 def open(pattern, *, partitions: int = 1, plan: str = "auto",
          monitor: bool = False,
-         config: Optional[RuntimeConfig] = None) -> Session:
+         config: Optional[RuntimeConfig] = None,
+         superchunk: Optional[int] = None,
+         mesh=None) -> Session:
     """Open a CEP session — the single entry point to the runtime.
 
     Parameters
@@ -448,6 +483,22 @@ def open(pattern, *, partitions: int = 1, plan: str = "auto",
                 host-side per-batch estimation would reintroduce the
                 O(K·stats) sync the monitored path exists to avoid.
     config:     a :class:`RuntimeConfig`; defaults are production-shaped.
+    superchunk: convenience override of ``config.superchunk`` — chunks
+                rolled through one compiled ``lax.scan`` dispatch; the
+                host syncs/replans only at superchunk boundaries (or at
+                an invariant flag), with detection, flags and replan
+                points bit-identical to per-chunk stepping.
+    mesh:       convenience override of ``config.mesh`` — shard the
+                K-partition axis over devices (``"auto"``, an int count,
+                or a 1-D ``Mesh`` with a ``"cep"`` axis).
     """
+    config = config or RuntimeConfig()
+    overrides = {}
+    if superchunk is not None:
+        overrides["superchunk"] = int(superchunk)
+    if mesh is not None:
+        overrides["mesh"] = mesh
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
     return Session(pattern, partitions=partitions, plan=plan,
                    monitor=monitor, config=config)

@@ -57,6 +57,15 @@ _LT = PRED_LT
 _GT = PRED_GT
 _NONE = PRED_NONE
 
+# Born-window sentinels shared by every stepping contract (f32-safe ±inf).
+# The pure step signature is ``process_fn(buffers, chunk, plan, t0, t1,
+# born_lo, born_hi) -> (buffers, StepResult)`` — state first, outputs
+# second — which is what lets one function serve jit (single stream),
+# jit(vmap) (fleet), lax.scan (superchunk) and shard_map (multi-device)
+# without adaptation shims; see ``core/scan.py``.
+NEG_INF = -3.0e38
+POS_INF = 3.0e38
+
 
 class Chunk(NamedTuple):
     """One stream chunk (struct-of-arrays)."""

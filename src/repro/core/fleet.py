@@ -45,16 +45,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .decision import DecisionPolicy, InvariantPolicy
-from .engine import (Buffers, Chunk, EngineConfig, OrderEngine, StepResult,
-                     TreeEngine, make_monitored_process, tree_plan_to_slots)
+from .engine import (NEG_INF, POS_INF, Buffers, Chunk, EngineConfig,
+                     OrderEngine, StepResult, TreeEngine,
+                     make_monitored_process, tree_plan_to_slots)
 from .invariants import LoweredInvariants, StackedLowered
 from .patterns import Pattern
 from .plans import OrderPlan, TreePlan
-from .stats import (MonitorState, Stat, monitor_init, sample_selectivities,
-                    uniform_stat)
+from .stats import (MonitorState, Stat, fleet_monitor_init,
+                    sample_selectivities, uniform_stat)
 
-_NEG_INF = -3.0e38
-_POS_INF = 3.0e38
+_NEG_INF = NEG_INF
+_POS_INF = POS_INF
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +146,7 @@ class FleetEngine:
 
     def __init__(self, kind: str, pattern: Pattern, k: int,
                  cfg: EngineConfig = EngineConfig(),
-                 monitor_laplace: float = 1.0):
+                 monitor_laplace: float = 1.0, mesh=None):
         if kind == "order":
             self.base = OrderEngine(pattern, cfg)
         elif kind == "tree":
@@ -157,8 +158,22 @@ class FleetEngine:
         self.cfg = cfg
         self.k = int(k)
         self.monitor_laplace = monitor_laplace
-        self._process = jax.jit(jax.vmap(self.base.process_fn))
+        # Optional 1-D device mesh: the K-partition axis is split over the
+        # mesh's "cep" axis (see distributed.sharding).  Partitions are
+        # independent, so sharding never changes semantics — D=1 meshes
+        # exercise the identical code path on a single device.
+        from ..distributed.sharding import resolve_cep_mesh
+        self.mesh = resolve_cep_mesh(mesh, self.k)
+        self._process = jax.jit(self._wrap(jax.vmap(self.base.process_fn)))
         self._mprocess = None  # monitored variant, compiled on first use
+        self._scans = {}       # superchunk scans keyed by `monitored`
+
+    def _wrap(self, fn):
+        """shard_map the vmapped step over the fleet mesh, if any."""
+        if self.mesh is None:
+            return fn
+        from ..distributed.sharding import shard_fleet_fn
+        return shard_fleet_fn(fn, self.mesh)
 
     # -- state -------------------------------------------------------------
 
@@ -169,9 +184,7 @@ class FleetEngine:
 
     def init_monitor(self, num_buckets: int = 16) -> MonitorState:
         """Stacked per-partition statistics rings, device-resident."""
-        one = monitor_init(self.pattern.n, num_buckets)
-        return jax.tree.map(
-            lambda x: jnp.tile(x[None], (self.k,) + (1,) * x.ndim), one)
+        return fleet_monitor_init(self.k, self.pattern.n, num_buckets)
 
     # -- plan stacking -----------------------------------------------------
 
@@ -228,9 +241,9 @@ class FleetEngine:
         syncs stay proportional to violations, not to K.
         """
         if self._mprocess is None:
-            self._mprocess = jax.jit(jax.vmap(make_monitored_process(
-                self.base.process_fn, self.base.spec,
-                self.monitor_laplace)))
+            self._mprocess = jax.jit(self._wrap(jax.vmap(
+                make_monitored_process(self.base.process_fn, self.base.spec,
+                                       self.monitor_laplace))))
         plan_arr = (jnp.asarray(plans)
                     if isinstance(plans, (np.ndarray, jnp.ndarray))
                     else self.plans_to_array(plans))
@@ -239,6 +252,21 @@ class FleetEngine:
             state, monitor, chunks, plan_arr, lowered,
             self._bcast(t0), self._bcast(t1),
             self._bcast(born_lo), self._bcast(born_hi))
+
+    def superchunk_scan(self, monitored: bool):
+        """The compiled S-chunks-per-dispatch scan (see ``core.scan``).
+
+        One cached compile per (engine config, monitored) pair — like the
+        per-chunk step, it is plan- and invariant-agnostic (both enter as
+        data), so replans and invariant redeployments never recompile.
+        """
+        from .scan import make_superchunk_scan
+
+        if monitored not in self._scans:
+            self._scans[monitored] = make_superchunk_scan(
+                self.base.process_fn, self.base.spec, monitored,
+                self.monitor_laplace, mesh=self.mesh)
+        return self._scans[monitored]
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +374,7 @@ class FleetRunner:
         escalate_on_overflow: bool = True,
         max_escalations: int = 4,
         seed: int = 0,
+        mesh=None,
     ):
         from .adaptation import make_planner
         from .compat import warn_legacy
@@ -360,8 +389,9 @@ class FleetRunner:
         kind = "order" if planner == "greedy" else "tree"
         self.engine_cfg = engine_cfg
         self.laplace = float(laplace)
+        self.mesh = mesh
         self.fleet = FleetEngine(kind, pattern, k, engine_cfg,
-                                 monitor_laplace=laplace)
+                                 monitor_laplace=laplace, mesh=mesh)
         # Overflow escalation mirrors AdaptiveRunner: a truncated join may
         # have dropped matches, so the chunk is re-evaluated with the next
         # pow2 match-set capacity (shared by the whole fleet — the stacked
@@ -420,7 +450,7 @@ class FleetRunner:
                 self.fleet.kind, self.pattern, self.k,
                 EngineConfig(b_cap=self.engine_cfg.b_cap, m_cap=cap,
                              backend=self.engine_cfg.backend),
-                monitor_laplace=self.laplace)
+                monitor_laplace=self.laplace, mesh=self.mesh)
         return self._fleets[cap]
 
     def _deploy(self, p: int, new_plan, t0: float, m: FleetMetrics) -> None:
@@ -638,7 +668,8 @@ class MonitoredFleetRunner(FleetRunner):
                  max_terms: Optional[int] = None,
                  laplace: float = 1.0,
                  escalate_on_overflow: bool = True,
-                 max_escalations: int = 4, seed: int = 0):
+                 max_escalations: int = 4, seed: int = 0,
+                 superchunk: int = 1, mesh=None):
         from .compat import warn_legacy
 
         warn_legacy("MonitoredFleetRunner")
@@ -650,12 +681,16 @@ class MonitoredFleetRunner(FleetRunner):
                          estimator_buckets=estimator_buckets,
                          laplace=laplace,
                          escalate_on_overflow=escalate_on_overflow,
-                         max_escalations=max_escalations, seed=seed)
+                         max_escalations=max_escalations, seed=seed,
+                         mesh=mesh)
         for pol in self.policies:
             if not isinstance(pol, InvariantPolicy):
                 raise TypeError(
                     "device monitoring verifies lowered invariant sets; "
                     "policy_factory must produce InvariantPolicy")
+        if superchunk < 1:
+            raise ValueError("superchunk must be >= 1")
+        self.superchunk = int(superchunk)
         self.monitor_buckets = estimator_buckets
         self._caps = (max_inv, max_terms)
         self._low: Optional[StackedLowered] = None
@@ -674,7 +709,29 @@ class MonitoredFleetRunner(FleetRunner):
 
     # -- main loop ---------------------------------------------------------
 
+    def _apply_pending(self, pending, rates, sel, t0: float,
+                       m: FleetMetrics) -> None:
+        """Deferred flag-triggered replans: the planner runs only for
+        partitions whose device flag fired on the last processed chunk,
+        each costing exactly one statistics sync.  Violations are counted
+        here, at application time, so ``violations == host_syncs ==
+        replans`` holds by construction (a flag on the stream's final
+        chunk never gets applied and is not counted)."""
+        for p in np.nonzero(pending)[0]:
+            stat = Stat(np.asarray(rates[p], np.float64),
+                        np.asarray(sel[p], np.float64))
+            m.violations += 1
+            m.host_syncs += 1
+            new_plan = replan_flagged_partition(
+                self.pattern, self.planner, self.policies[p],
+                self._low, p, stat, self._caps)
+            m.replans += 1
+            if new_plan != self.cur_plans[p]:
+                self._deploy(p, new_plan, t0, m)
+
     def run(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+        if self.superchunk > 1:
+            return self._run_scanned(fleet_stream)
         m = FleetMetrics(
             per_partition_matches=np.zeros(self.k, np.int64),
             per_partition_deployments=np.zeros(self.k, np.int64))
@@ -687,23 +744,7 @@ class MonitoredFleetRunner(FleetRunner):
 
         for fc in fleet_stream:
             t_ctl = time.perf_counter()
-            # Deferred flag-triggered replans: the planner runs only for
-            # partitions whose device flag fired on the previous chunk,
-            # and each costs exactly one statistics sync.  Violations are
-            # counted here, at application time, so ``violations ==
-            # host_syncs == replans`` holds by construction (a flag on the
-            # stream's final chunk never gets applied and is not counted).
-            for p in np.nonzero(pending)[0]:
-                stat = Stat(np.asarray(rates_dev[p], np.float64),
-                            np.asarray(sel_dev[p], np.float64))
-                m.violations += 1
-                m.host_syncs += 1
-                new_plan = replan_flagged_partition(
-                    self.pattern, self.planner, self.policies[p],
-                    self._low, p, stat, self._caps)
-                m.replans += 1
-                if new_plan != self.cur_plans[p]:
-                    self._deploy(p, new_plan, fc.t0, m)
+            self._apply_pending(pending, rates_dev, sel_dev, fc.t0, m)
             pending[:] = False
             migrating = self._fold_lapsed(fc.t0)
             m.control_time_s += time.perf_counter() - t_ctl
@@ -751,4 +792,140 @@ class MonitoredFleetRunner(FleetRunner):
             m.closure_expansions += int(cl.sum())
             m.neg_rejected += int(ng.sum())
             m.per_partition_matches += full
+        return m
+
+    # -- superchunk (scanned) loop -----------------------------------------
+
+    def _run_scanned(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+        """The per-chunk loop above with the host taken out of it.
+
+        ``lax.scan`` rolls up to ``superchunk`` chunks per dispatch; flags,
+        drift and counters accumulate on device (``core.scan``).  The host
+        surfaces only at window boundaries — or, via the optimistic prefix
+        re-run, immediately after an in-window invariant flag / overflow,
+        so deferred-replan and escalation semantics stay **bit-identical**
+        to per-chunk stepping (asserted by ``tests/test_superchunk.py``).
+        """
+        from .scan import first_event, stack_window, window_control
+
+        s_cap = self.superchunk
+        m = FleetMetrics(
+            per_partition_matches=np.zeros(self.k, np.int64),
+            per_partition_deployments=np.zeros(self.k, np.int64))
+        state = self.fleet.init_state()
+        monitor = self.fleet.init_monitor(self.monitor_buckets)
+        if self._low is None:
+            self._prime()
+        pending = np.zeros(self.k, bool)
+        pend_rates = pend_sel = None
+        it = iter(fleet_stream)
+        buf: List[FleetChunk] = []
+        exhausted = False
+
+        while True:
+            while len(buf) < s_cap and not exhausted:
+                try:
+                    buf.append(next(it))
+                except StopIteration:
+                    exhausted = True
+            if not buf:
+                break
+            t_ctl = time.perf_counter()
+            self._apply_pending(pending, pend_rates, pend_sel,
+                                buf[0].t0, m)
+            pending[:] = False
+            n_en = len(buf)
+            ctl = window_control(self._replan_t, self._migration_until,
+                                 [fc.t0 for fc in buf], s_cap)
+            xs = stack_window([fc.chunk for fc in buf],
+                              [fc.t0 for fc in buf],
+                              [fc.t1 for fc in buf], ctl, s_cap)
+            cur_rows = jnp.asarray(self._cur_rows)
+            old_rows = jnp.asarray(self._old_rows)
+            m.control_time_s += time.perf_counter() - t_ctl
+
+            t_eng = time.perf_counter()
+            scan = self._active_fleet.superchunk_scan(monitored=True)
+            low_dev = self._low.device()
+            state2, monitor2, ys = scan(state, monitor, cur_rows, old_rows,
+                                        low_dev, xs)
+            # Eager readback is counters + flags + drift only; the (S, K,
+            # n[, n]) statistic stacks stay on device and are pulled
+            # per-partition at application time — host traffic stays
+            # O(violations), not O(S·K·stats), exactly as per-chunk.
+            (full_h, pm_h, ov_h, cl_h, ng_h, violated_h, drift_h) = \
+                jax.device_get((ys.full, ys.pm, ys.overflow, ys.closure,
+                                ys.neg, ys.violated, ys.drift))
+            f = first_event(violated_h, ov_h, n_en,
+                            self.escalate_on_overflow)
+            if f is not None and f < n_en - 1:
+                # In-window event: replay the prefix [0..f] from the saved
+                # pre-window carry (bitwise-identical compute) so the host
+                # can replan / escalate before chunk f+1 runs — exactly
+                # the per-chunk contract.  Costs one extra dispatch, only
+                # when an event actually fired.
+                en = np.zeros(s_cap, bool)
+                en[:f + 1] = True
+                xs_pre = xs._replace(enabled=jnp.asarray(en))
+                state2, monitor2, _ = scan(state, monitor, cur_rows,
+                                           old_rows, low_dev, xs_pre)
+            accept = n_en if f is None else f + 1
+            last = accept - 1
+            state, monitor = state2, monitor2
+
+            # Commit host mirrors to the fold state at the last accepted
+            # chunk (float64, same trajectory the per-chunk loop walks —
+            # including retiring the lapsed partitions' old plans).
+            self._replan_t = ctl.replan_seq[last].copy()
+            lapsed = ctl.old_sel[last]
+            self._old_rows[lapsed] = self._cur_rows[lapsed]
+            for p in np.nonzero(lapsed)[0]:
+                self.old_plans[p] = None
+
+            counters = [np.asarray(c, np.int64)
+                        for c in (full_h, pm_h, ov_h, cl_h, ng_h)]
+            full_l, pm_l, ov_l, cl_l, ng_l = (c[last].copy()
+                                              for c in counters)
+            if (self.escalate_on_overflow and ov_l.sum() > 0):
+                # Overflow recovery for the event chunk, identical to the
+                # per-chunk loop: re-evaluate at the next pow2 match
+                # capacity from the post-chunk state (events are already
+                # ingested); the escalated fleet persists for the
+                # following windows.
+                migrating_l = ctl.migrating[last]
+                tries = 0
+                while ov_l.sum() > 0 and tries < self.max_escalations:
+                    self._active_fleet = self._escalated_fleet()
+                    m.escalations += 1
+                    tries += 1
+                    empty = buf[last].chunk._replace(
+                        valid=jnp.zeros_like(buf[last].chunk.valid))
+                    pm_so_far = pm_l
+                    state, (full_l, pm_l, ov_l, cl_l, ng_l) = \
+                        self._plain_passes(state, buf[last], empty,
+                                           migrating_l)
+                    pm_l = pm_l + pm_so_far
+
+            for s in range(accept):
+                m.chunks += 1
+                m.events += int(np.asarray(buf[s].chunk.valid).sum())
+                row = ((full_l, pm_l, ov_l, cl_l, ng_l) if s == last
+                       else tuple(c[s] for c in counters))
+                full, pm, ov, cl, ng = row
+                m.full_matches += int(full.sum())
+                m.pm_created += int(pm.sum())
+                m.overflow += int(ov.sum())
+                m.closure_expansions += int(cl.sum())
+                m.neg_rejected += int(ng.sum())
+                m.per_partition_matches += np.asarray(full, np.int64)
+            m.migration_partition_chunks += int(
+                ctl.migrating[:accept].sum())
+            m.last_drift = np.asarray(drift_h[last], np.float32)
+            pending = np.asarray(violated_h[last]).copy()
+            # Device slices: _apply_pending materializes row p only for
+            # partitions whose flag actually fired.
+            pend_rates = ys.rates[last]
+            pend_sel = ys.sel[last]
+            m.engine_time_s += time.perf_counter() - t_eng
+            buf = buf[accept:]
         return m

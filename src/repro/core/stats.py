@@ -153,6 +153,23 @@ def monitor_init(n: int, num_buckets: int = 16) -> MonitorState:
     )
 
 
+def fleet_monitor_init(k: int, n: int, num_buckets: int = 16) -> MonitorState:
+    """Stacked per-partition statistics rings: every leaf leads with K.
+
+    This is the monitor half of the superchunk scan carry
+    (``core.scan``): a pure pytree that ``monitor_update`` threads through
+    ``vmap`` (fleet) and ``lax.scan`` (superchunk) alike — including the
+    ring ``head``/``filled`` scalars, which stack to ``(K,)`` so a device
+    mesh can split the whole carry on its leading axis.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    one = monitor_init(n, num_buckets)
+    return jax.tree.map(
+        lambda x: jnp.tile(x[None], (k,) + (1,) * x.ndim), one)
+
+
 def monitor_update(state: MonitorState, counts, duration, trials,
                    hits) -> MonitorState:
     """Push one chunk of observations into the ring (device mirror of

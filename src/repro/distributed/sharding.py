@@ -54,6 +54,10 @@ DEFAULT_RULES: Dict[str, AxisVal] = {
     "ssm_state": None,
     "ssm_heads": "model",
     "frontend": None,
+    # CEP fleet: the leading K-partition axis of every data-plane tensor.
+    # Partitions are independent streams, so this is the one logical axis
+    # the CEP runtime shards; everything else stays replicated.
+    "cep_partitions": "cep",
 }
 
 
@@ -163,3 +167,112 @@ def logical_sharding(shape, logical, tag: str = "") -> Optional[NamedSharding]:
     if r is None or r.mesh is None:
         return None
     return r.sharding(shape, logical, tag)
+
+
+# ---------------------------------------------------------------------------
+# CEP fleet mesh layer
+# ---------------------------------------------------------------------------
+#
+# The CEP data plane is a pytree whose every leaf leads with the K-partition
+# axis (stacked ring buffers, monitor rings, plan rows, lowered invariant
+# tensors, per-partition counters).  Partitions are fully independent
+# streams, so the fleet maps onto a 1-D device mesh with ONE rule — split K
+# over the "cep" axis, replicate the rest — and needs zero collectives.
+# The rule lives in DEFAULT_RULES ("cep_partitions") so dry-runs and
+# fallback reporting treat the CEP fleet like any other sharded workload.
+
+CEP_AXIS = "cep"
+
+
+def cep_mesh(n_devices: Optional[int] = None, devices=None) -> Mesh:
+    """A 1-D mesh over local devices with the ``cep`` partition axis."""
+    import numpy as np
+
+    devs = list(devices if devices is not None else jax.devices())
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"mesh wants {n_devices} devices, only {len(devs)} present")
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (CEP_AXIS,))
+
+
+def resolve_cep_mesh(mesh, k: int) -> Optional[Mesh]:
+    """Normalize the facade's ``mesh=`` config into a fleet mesh.
+
+    Accepts ``None`` (no sharding), ``"auto"`` (all local devices), an
+    ``int`` device count, or a prebuilt 1-D :class:`Mesh` carrying a
+    ``cep`` axis.  The K-partition axis must divide evenly — an uneven
+    split would silently unbalance per-partition semantics, so it raises
+    (the logical-rule fallback-to-replication is for model weights, not
+    for the stream data plane).
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if CEP_AXIS not in mesh.shape:
+            raise ValueError(
+                f"fleet mesh must carry a {CEP_AXIS!r} axis; "
+                f"got axes {tuple(mesh.shape)}")
+        m = mesh
+    elif mesh == "auto":
+        m = cep_mesh()
+    elif isinstance(mesh, int):
+        m = cep_mesh(mesh)
+    else:
+        raise TypeError(f"mesh must be None, 'auto', an int device count "
+                        f"or a jax Mesh; got {type(mesh).__name__}")
+    d = m.shape[CEP_AXIS]
+    if k % d != 0:
+        raise ValueError(
+            f"K={k} partitions do not divide over {d} devices; choose K "
+            f"as a multiple of the mesh size")
+    return m
+
+
+def fleet_pspec(leading_k: bool = True) -> PartitionSpec:
+    """The one CEP partition rule as a PartitionSpec tree prefix.
+
+    ``leading_k=True`` shards a leaf's first axis over ``cep`` (state,
+    plan rows, lowered tensors, per-partition outputs); ``False`` gives
+    the scan layout — a leading superchunk axis, partitions second.
+    """
+    if leading_k:
+        return PartitionSpec(CEP_AXIS)
+    return PartitionSpec(None, CEP_AXIS)
+
+
+def shard_fleet_fn(fn, mesh: Mesh):
+    """``shard_map`` a per-chunk fleet step: every arg/out leads with K."""
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=fleet_pspec(),
+                     out_specs=fleet_pspec(), check_rep=False)
+
+
+def shard_fleet_scan(scan_fn, mesh: Mesh):
+    """``shard_map`` the superchunk scan.
+
+    Signature: ``scan_fn(buffers, monitor, cur_rows, old_rows, lowered,
+    xs) -> (buffers, monitor, ys)``.  State/rows/lowered lead with K;
+    ``xs``/``ys`` lead with (S, K) except the shared chunk clock and the
+    ``enabled`` gate, which are replicated so every device gates the same
+    chunks.  The body is collective-free (partitions are independent), so
+    device-local ``lax.cond`` divergence — e.g. pass B running only on
+    devices that own a migrating partition — is safe and free.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from ..core.scan import SuperchunkXs
+
+    k_led = fleet_pspec()
+    sk_led = fleet_pspec(leading_k=False)
+    rep = PartitionSpec()
+    xs_spec = SuperchunkXs(
+        chunk=sk_led, t0=rep, t1=rep, enabled=rep,
+        born_lo=sk_led, migrating=sk_led, old_sel=sk_led)
+    return shard_map(
+        scan_fn, mesh=mesh,
+        in_specs=(k_led, k_led, k_led, k_led, k_led, xs_spec),
+        out_specs=(k_led, k_led, sk_led),
+        check_rep=False)

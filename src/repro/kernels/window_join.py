@@ -107,13 +107,24 @@ def window_join_pallas(
     return out[:M, :B].astype(jnp.bool_)
 
 
-def _count_kernel(l_ref, r_ref, op_ref, th_ref, out_ref):
+def _count_kernel(l_ref, r_ref, op_ref, th_ref, out_ref, *, m_valid, b_valid):
     """Per-tile match counting — avoids materializing ok to HBM when only
-    cardinalities are needed (statistics estimation, §2.2)."""
+    cardinalities are needed (statistics estimation, §2.2).
+
+    ``m_valid`` / ``b_valid`` are the true (unpadded) extents, static at
+    trace time.  Padded (m, b) cells are masked out explicitly: a pure
+    value-based pad (e.g. NaN) only dies on rows whose op actually
+    *compares* — an op ∉ {1, 2, 3} row takes the vacuous-True branch, so a
+    constraint stack of only NONE rows would count the padding.
+    """
     C = l_ref.shape[0]
     bm = l_ref.shape[1]
     bb = r_ref.shape[1]
-    acc = jnp.ones((bm, bb), jnp.bool_)
+    mi = pl.program_id(0) * bm + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bb), 0)
+    bi = pl.program_id(1) * bb + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bb), 1)
+    acc = (mi < m_valid) & (bi < b_valid)
     for c in range(C):
         l = l_ref[c, :][:, None]
         r = r_ref[c, :][None, :]
@@ -143,20 +154,18 @@ def window_join_count_pallas(
     bb = min(block_b, max(B, 128))
     Mp = (M + bm - 1) // bm * bm
     Bp = (B + bb - 1) // bb * bb
-    # Pad with an always-false row (op GT with -inf lhs) so padding never
-    # counts: simpler — pad operands with values that fail row 0 if row 0 is
-    # a validity row; engines always put validity rows first, but to stay
-    # generic we pad L with +inf and append... instead mask after: count
-    # per-tile then subtract padded-region counts via a validity row the
-    # caller provides.  We keep it simple and exact: pad with NaN, which
-    # fails every comparison.
+    # Padding exactness: the kernel masks every (m, b) cell against the true
+    # extents (static at trace time), so pad *values* are irrelevant — they
+    # can never be counted, whatever the op codes are.  (An earlier NaN-pad
+    # scheme relied on padded values failing a comparison, which a
+    # vacuous-True op ∉ {1, 2, 3} row never performs.)
     if Mp != M:
-        L = jnp.pad(L, ((0, 0), (0, Mp - M)), constant_values=jnp.nan)
+        L = jnp.pad(L, ((0, 0), (0, Mp - M)))
     if Bp != B:
-        R = jnp.pad(R, ((0, 0), (0, Bp - B)), constant_values=jnp.nan)
+        R = jnp.pad(R, ((0, 0), (0, Bp - B)))
     grid = (Mp // bm, Bp // bb)
     counts = pl.pallas_call(
-        _count_kernel,
+        functools.partial(_count_kernel, m_valid=M, b_valid=B),
         grid=grid,
         in_specs=[
             pl.BlockSpec((C, bm), lambda i, j: (0, i)),

@@ -115,15 +115,18 @@ class CEPFleetServingEngine:
     def __init__(self, pattern: Pattern, k: int, plans,
                  engine_cfg: EngineConfig = EngineConfig(),
                  kind: str = "order", chunk_cap: int = 512,
-                 laplace: float = 1.0):
+                 laplace: float = 1.0, superchunk: int = 1, mesh=None):
         from ..core.compat import warn_legacy
 
         if type(self) is CEPFleetServingEngine:
             warn_legacy("CEPFleetServingEngine")
         self.fleet = FleetEngine(kind, pattern, k, engine_cfg,
-                                 monitor_laplace=laplace)
+                                 monitor_laplace=laplace, mesh=mesh)
         self.k = k
         self.chunk_cap = chunk_cap
+        if superchunk < 1:
+            raise ValueError("superchunk must be >= 1")
+        self.superchunk = int(superchunk)
         self.state = self.fleet.init_state()
         # Host-owned copy: plan rows must stay writable for deploy_plan
         # (np.asarray of a jax array is a read-only view).
@@ -185,6 +188,56 @@ class CEPFleetServingEngine:
         return self.process_chunk(self._route(type_id, ts, attr, keys),
                                   t0, t1)
 
+    # -- superchunk control plane ------------------------------------------
+
+    def _accumulate_rows(self, counters, n_rows: int) -> np.ndarray:
+        """Fold accepted rows of host (full, neg, closure, overflow)
+        counter stacks into the cumulative per-partition totals."""
+        full_h, neg_h, cl_h, ov_h = counters
+        full = np.asarray(full_h[:n_rows], np.int64)
+        self.matches += full.sum(axis=0)
+        self.neg_rejected += np.asarray(neg_h[:n_rows],
+                                        np.int64).sum(axis=0)
+        self.closure_expansions += np.asarray(cl_h[:n_rows],
+                                              np.int64).sum(axis=0)
+        self.overflow += np.asarray(ov_h[:n_rows], np.int64).sum(axis=0)
+        return full
+
+    def process_superchunk(self, chunks, edges) -> np.ndarray:
+        """Roll a sequence of already-routed stacked chunks through the
+        fleet, ``superchunk`` chunks per compiled dispatch (``core.scan``).
+
+        ``chunks``: stacked ``Chunk``s (leading K axis); ``edges``: their
+        ``(t0, t1]`` slices.  Plans are static between ``deploy_plan``
+        calls, so the host never needs to surface mid-window — every
+        window is exactly one dispatch.  Returns the per-chunk ``(S, K)``
+        full-match counts; cumulative counters update as in
+        ``process_chunk``.
+        """
+        from ..core.scan import stack_window, static_control
+
+        s_cap = self.superchunk
+        n = len(chunks)
+        if n != len(edges):
+            raise ValueError(f"{n} chunks vs {len(edges)} edges")
+        out = np.zeros((n, self.k), np.int64)
+        scan = self.fleet.superchunk_scan(monitored=False)
+        ctl = static_control(self.k, s_cap)
+        i = 0
+        while i < n:
+            win = chunks[i:i + s_cap]
+            t0s = [e[0] for e in edges[i:i + len(win)]]
+            t1s = [e[1] for e in edges[i:i + len(win)]]
+            xs = stack_window(win, t0s, t1s, ctl, s_cap)
+            rows = jnp.asarray(self._rows)
+            self.state, _, ys = scan(self.state, None, rows, rows,
+                                     None, xs)
+            ys_h = jax.device_get((ys.full, ys.neg, ys.closure,
+                                   ys.overflow))
+            out[i:i + len(win)] = self._accumulate_rows(ys_h, len(win))
+            i += len(win)
+        return out
+
 
 class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
     """Serving fleet with on-device invariant monitoring (§3.3-§3.5).
@@ -215,7 +268,7 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
                  monitor_buckets: int = 16,
                  max_inv: Optional[int] = None,
                  max_terms: Optional[int] = None,
-                 laplace: float = 1.0):
+                 laplace: float = 1.0, superchunk: int = 1, mesh=None):
         from ..core.compat import warn_legacy
 
         warn_legacy("MonitoredCEPFleetServingEngine")
@@ -229,7 +282,7 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
         plan0, self._low, self._caps = prime_invariant_policies(
             pattern, self.planner, self.policies, (max_inv, max_terms))
         super().__init__(pattern, k, plan0, engine_cfg, kind, chunk_cap,
-                         laplace=laplace)
+                         laplace=laplace, superchunk=superchunk, mesh=mesh)
         self.plans = [plan0] * k
         self.monitor = self.fleet.init_monitor(monitor_buckets)
         self.violations = np.zeros(k, np.int64)
@@ -259,6 +312,24 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
         super().deploy_plan(partition, plan)
         self.plans[partition] = plan
 
+    def _apply_flags(self, fired_mask, rates, sel) -> None:
+        """The O(violations) control plane: sync + replan flagged rows only.
+
+        ``rates``/``sel`` may be device or host arrays; a partition's
+        snapshot is materialized only when its flag fired.
+        """
+        for p in np.nonzero(np.asarray(fired_mask))[0]:
+            self.violations[p] += 1
+            self.host_syncs += 1
+            stat = Stat(np.asarray(rates[p], np.float64),
+                        np.asarray(sel[p], np.float64))
+            new_plan = replan_flagged_partition(
+                self.pattern, self.planner, self.policies[p],
+                self._low, p, stat, self._caps)
+            if new_plan != self.plans[p]:
+                self.deploy_plan(p, new_plan)  # also records self.plans[p]
+                self.replans[p] += 1
+
     def process_chunk(self, chunk, t0: float, t1: float) -> np.ndarray:
         """Tick the fused monitored fleet over an already-routed chunk and
         replan any partition whose invariant flag fired."""
@@ -271,18 +342,62 @@ class MonitoredCEPFleetServingEngine(CEPFleetServingEngine):
         # extra per-tick host traffic device monitoring costs).
         vd = np.asarray(jnp.stack([violated.astype(jnp.float32), drift]))
         self.last_drift = vd[1].astype(np.float32)
-
-        # Control plane: O(violations) — sync + replan flagged rows only.
-        fired = np.nonzero(vd[0] > 0.5)[0]
-        for p in fired:
-            self.violations[p] += 1
-            self.host_syncs += 1
-            stat = Stat(np.asarray(rates[p], np.float64),
-                        np.asarray(sel[p], np.float64))
-            new_plan = replan_flagged_partition(
-                self.pattern, self.planner, self.policies[p],
-                self._low, p, stat, self._caps)
-            if new_plan != self.plans[p]:
-                self.deploy_plan(p, new_plan)  # also records self.plans[p]
-                self.replans[p] += 1
+        self._apply_flags(vd[0] > 0.5, rates, sel)
         return full
+
+    def process_superchunk(self, chunks, edges) -> np.ndarray:
+        """Monitored superchunk ticks: S chunks per dispatch, flags and
+        telemetry accumulated on device, host control only at boundaries.
+
+        Bit-identical to looping ``process_chunk``: the scan is run
+        optimistically, and when a flag fires at in-window chunk ``f`` the
+        prefix ``[0..f]`` is re-run from the pre-window state so the
+        replanned rows deploy before chunk ``f+1`` — exactly the per-tick
+        contract (see ``core.scan``).  Violation-free windows cost one
+        dispatch; host work stays O(violations).
+        """
+        from ..core.scan import first_event, stack_window, static_control
+
+        s_cap = self.superchunk
+        n = len(chunks)
+        if n != len(edges):
+            raise ValueError(f"{n} chunks vs {len(edges)} edges")
+        out = np.zeros((n, self.k), np.int64)
+        scan = self.fleet.superchunk_scan(monitored=True)
+        ctl = static_control(self.k, s_cap)
+        i = 0
+        while i < n:
+            win = chunks[i:i + s_cap]
+            n_en = len(win)
+            t0s = [e[0] for e in edges[i:i + n_en]]
+            t1s = [e[1] for e in edges[i:i + n_en]]
+            xs = stack_window(win, t0s, t1s, ctl, s_cap)
+            rows = jnp.asarray(self._rows)
+            low_dev = self._low.device()
+            state2, mon2, ys = scan(self.state, self.monitor, rows, rows,
+                                    low_dev, xs)
+            # Counters + flags + drift come back eagerly; the statistic
+            # stacks stay device-resident and are materialized
+            # per-partition only when a flag fired (O(violations) host
+            # traffic, as in the per-tick path).
+            ys_h = jax.device_get(
+                (ys.full, ys.pm, ys.overflow, ys.closure, ys.neg,
+                 ys.violated, ys.drift))
+            (full_h, pm_h, ov_h, cl_h, ng_h, violated_h, drift_h) = ys_h
+            f = first_event(violated_h, ov_h, n_en, escalate=False)
+            if f is not None and f < n_en - 1:
+                en = np.zeros(s_cap, bool)
+                en[:f + 1] = True
+                state2, mon2, _ = scan(
+                    self.state, self.monitor, rows, rows, low_dev,
+                    xs._replace(enabled=jnp.asarray(en)))
+            accept = n_en if f is None else f + 1
+            self.state, self.monitor = state2, mon2
+            out[i:i + accept] = self._accumulate_rows(
+                (full_h, ng_h, cl_h, ov_h), accept)
+            last = accept - 1
+            self.last_drift = np.asarray(drift_h[last], np.float32)
+            self._apply_flags(violated_h[last], ys.rates[last],
+                              ys.sel[last])
+            i += accept
+        return out

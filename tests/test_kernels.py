@@ -43,11 +43,34 @@ def test_pallas_dtypes(dtype, rng):
 
 def test_count_kernel(rng):
     L, R, op, th = _case(rng, 6, 100, 140)
-    op[0] = 1  # ensure at least one comparing row (NaN-pad exactness)
     want = int(np.asarray(
         ops.window_join(L, R, op, th, backend="ref")).sum())
     got = int(ops.window_join_count(L, R, op, th, backend="interpret"))
     assert want == got
+
+
+@pytest.mark.parametrize("C,M,B", [(2, 130, 140), (1, 9, 129), (3, 257, 5)])
+def test_count_kernel_padding_exact_all_ops(C, M, B, rng):
+    """Regression: padded (m, b) cells must never count, for ANY op mix.
+
+    The old NaN-padding scheme relied on pad values failing a comparison;
+    a vacuous-True row (op NONE) never compares, so a stack of NONE rows
+    counted the full padded tile.  The kernel now masks padding explicitly.
+    """
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    th = np.zeros(C, np.float32)
+    # Worst case: every row vacuous-True -> count must be exactly M*B.
+    op = np.zeros(C, np.int32)
+    got = int(ops.window_join_count(L, R, op, th, backend="interpret"))
+    assert got == M * B
+    # Mixed codes (incl. NONE) against the dense oracle.
+    op = rng.integers(0, 4, size=C).astype(np.int32)
+    th = rng.normal(scale=0.5, size=C).astype(np.float32)
+    want = int(np.asarray(
+        ops.window_join(L, R, op, th, backend="ref")).sum())
+    assert int(ops.window_join_count(L, R, op, th,
+                                     backend="interpret")) == want
 
 
 def test_opcode_semantics():
@@ -90,6 +113,50 @@ def test_property_and_of_rows(C, M, B, seed):
         acc &= np.asarray(window_join_ref(
             L[c:c + 1], R[c:c + 1], op[c:c + 1], th[c:c + 1]))
     assert (full == acc).all()
+
+
+def test_superchunk_scan_interpret_parity(rng):
+    """The superchunk scan drives the kernel through vmap + lax.scan +
+    cond; the Pallas body (interpret mode on CPU) must agree with the jnp
+    oracle chunk for chunk through that whole pipeline."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import Chunk, EngineConfig
+    from repro.core.fleet import FleetEngine
+    from repro.core.patterns import chain_predicates, seq_pattern
+    from repro.core.scan import stack_window, static_control
+
+    pat = seq_pattern([0, 1, 2], 10.0, chain_predicates([0, 1, 2],
+                                                        theta=0.4))
+    k, s, cap = 2, 4, 24
+
+    chunks, edges = [], []
+    for i in range(3):
+        t0, t1 = 4.0 * i, 4.0 * (i + 1)
+        tid = rng.integers(0, 3, (k, cap)).astype(np.int32)
+        ts = np.sort(rng.uniform(t0, t1, (k, cap)), axis=1).astype(
+            np.float32)
+        attr = rng.normal(size=(k, cap, 1)).astype(np.float32)
+        chunks.append(Chunk(jnp.asarray(tid), jnp.asarray(ts),
+                            jnp.asarray(attr), jnp.ones((k, cap), bool)))
+        edges.append((t0, t1))
+    xs = stack_window(chunks, [e[0] for e in edges],
+                      [e[1] for e in edges], static_control(k, s), s)
+
+    rows = jnp.asarray(np.stack([(0, 1, 2), (2, 1, 0)]).astype(np.int32))
+    results = []
+    for backend in ("ref", "interpret"):
+        fleet = FleetEngine("order", pat, k,
+                            EngineConfig(b_cap=32, m_cap=64,
+                                         backend=backend))
+        scan = fleet.superchunk_scan(monitored=False)
+        state, _, ys = scan(fleet.init_state(), None, rows, rows, None, xs)
+        results.append(jax.device_get(ys))
+    a, b = results
+    for f in ("full", "pm", "overflow", "closure", "neg"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.full[:3].sum() > 0  # the case must actually join something
 
 
 def test_backend_selection():

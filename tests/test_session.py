@@ -41,13 +41,27 @@ def oracle_counts(pattern, k, seed=11, kind="traffic"):
             for s in streams(k, seed, kind)]
 
 
-@pytest.mark.parametrize("k", [1, 4])
-@pytest.mark.parametrize("monitored", [False, True])
-@pytest.mark.parametrize("plan", ["order", "tree"])
-def test_session_covers_legacy_grid(plan, monitored, k):
-    """One facade, eight legacy configurations: session == legacy == oracle."""
+# plan × monitored × K × superchunk.  superchunk > 1 applies to monitored
+# sessions only (host decision policies need per-chunk statistics); the
+# scanned tree-plan combinations are the compile-heaviest of the suite and
+# ride under the `slow` marker.
+_GRID = [
+    pytest.param(plan, monitored, k, s,
+                 marks=((pytest.mark.slow,)
+                        if s > 1 and (plan == "tree" or k == 1) else ()))
+    for plan in ("order", "tree")
+    for monitored in (False, True)
+    for k in (1, 4)
+    for s in ((1, 8) if monitored else (1,))
+]
+
+
+@pytest.mark.parametrize("plan,monitored,k,superchunk", _GRID)
+def test_session_covers_legacy_grid(plan, monitored, k, superchunk):
+    """One facade, eight legacy configurations (plus the scanned variants):
+    session == legacy per-chunk runner == oracle, bit-identical."""
     sess = cep.open(PATTERN, partitions=k, plan=plan, monitor=monitored,
-                    config=CONFIG)
+                    config=CONFIG, superchunk=superchunk)
     tel = sess.run(streams(k))
 
     planner = "greedy" if plan == "order" else "zstream"
@@ -74,6 +88,11 @@ def test_session_covers_legacy_grid(plan, monitored, k):
     assert tel.chunks == SCFG.n_chunks
     if monitored:
         assert tel.host_syncs == tel.violations  # O(violations) host work
+        # Scanned control must hit the per-chunk loop's exact replan
+        # points and deployments, not just its match counts.
+        assert tel.violations == legacy_m.violations
+        assert tel.replans == legacy_m.replans
+        assert tel.deployments == legacy_m.deployments
 
 
 @pytest.mark.parametrize("k", [1, 4])

@@ -1,0 +1,290 @@
+"""Superchunk scan + sharded fleet differentials.
+
+The scanned data plane (``core/scan.py``) must be **bit-identical** to
+per-chunk stepping for every superchunk size — match counts, violation
+flags, replan points, deployed plans, escalations — because the optimistic
+prefix re-run surfaces the host at exactly the chunks the per-chunk loop
+would.  The sharded plane (``shard_map`` over the ``cep`` mesh axis) must
+be bit-identical to the unsharded one because partitions are independent.
+Both claims are asserted here against the per-chunk runners, which are
+themselves pinned to the brute-force oracle by ``tests/test_session.py``.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import cep
+from repro.cep import P, RuntimeConfig
+from repro.core.decision import InvariantPolicy
+from repro.core.engine import EngineConfig
+from repro.core.fleet import MonitoredFleetRunner, stacked_streams
+from repro.data.cep_streams import StreamConfig, make_stream
+from repro.distributed.sharding import cep_mesh, resolve_cep_mesh
+
+PATTERN = (P.seq(0, 1, 2)
+           .where(P.attr(0) < P.attr(1) - 0.3,
+                  P.attr(1) < P.attr(2) - 0.3)
+           .within(4.0))
+SCFG = StreamConfig(n_types=3, n_chunks=12, chunk_cap=128, base_rate=8.0)
+CONFIG = RuntimeConfig(buffer_capacity=64, match_capacity=1024,
+                       max_invariants=8, max_terms=16)
+
+_COUNTER_FIELDS = (
+    "chunks", "events", "full_matches", "pm_created", "overflow",
+    "closure_expansions", "neg_rejected", "replans", "deployments",
+    "escalations", "migration_partition_chunks", "violations", "host_syncs",
+)
+
+
+def streams(k, seed=11, kind="traffic", scfg=SCFG):
+    return [make_stream(kind, dataclasses.replace(scfg, seed=seed + p))
+            for p in range(k)]
+
+
+def make_runner(k, superchunk=1, engine_cfg=None, mesh=None):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return MonitoredFleetRunner(
+            PATTERN.build(), k, planner="greedy",
+            policy_factory=lambda: InvariantPolicy(k=1, d=0.0),
+            engine_cfg=engine_cfg or EngineConfig(b_cap=64, m_cap=1024),
+            max_inv=8, max_terms=16, seed=0, superchunk=superchunk,
+            mesh=mesh)
+
+
+def assert_metrics_identical(a, b):
+    """Every deterministic FleetMetrics field, bitwise."""
+    for f in _COUNTER_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f, getattr(a, f), getattr(b, f))
+    assert a.per_partition_matches.tolist() == \
+        b.per_partition_matches.tolist()
+    assert a.per_partition_deployments.tolist() == \
+        b.per_partition_deployments.tolist()
+    if a.last_drift is None:
+        assert b.last_drift is None
+    else:
+        assert np.array_equal(a.last_drift, b.last_drift)
+
+
+@pytest.fixture(scope="module")
+def per_chunk_baseline():
+    """One per-chunk reference run shared by the scan grid (compiles are
+    the dominant cost of this module; the baseline only needs to happen
+    once)."""
+    base = make_runner(4)
+    m = base.run(stacked_streams(streams(4)))
+    return base, m
+
+
+def _check_scan_vs_baseline(superchunk, per_chunk_baseline):
+    base, m1 = per_chunk_baseline
+    scan = make_runner(4, superchunk=superchunk)
+    ms = scan.run(stacked_streams(streams(4)))
+    assert_metrics_identical(m1, ms)
+    assert base.cur_plans == scan.cur_plans          # deployed plans
+    assert np.array_equal(base._replan_t, scan._replan_t)  # replan points
+    assert m1.violations > 0  # the stream must actually exercise the flags
+
+
+@pytest.mark.parametrize("superchunk", [3, 8])
+def test_scanned_equals_per_chunk(superchunk, per_chunk_baseline):
+    """Window sizes that straddle and divide the stream both reproduce the
+    per-chunk loop exactly — counters, flags, replan points, deployed
+    plans and migration bookkeeping."""
+    _check_scan_vs_baseline(superchunk, per_chunk_baseline)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("superchunk", [2, 16])
+def test_scanned_equals_per_chunk_grid(superchunk, per_chunk_baseline):
+    """The rest of the size grid (2 = maximal boundary count, 16 = window
+    longer than the stream) — compile-heavy, so opt-in via ``-m slow``."""
+    _check_scan_vs_baseline(superchunk, per_chunk_baseline)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["stocks"])
+def test_scanned_equals_per_chunk_drifting(kind):
+    """Frequent-drift regime: many in-window events -> many prefix
+    re-runs; the optimistic restart must stay exact under pressure."""
+    k = 4
+    scfg = dataclasses.replace(SCFG, n_chunks=20)
+    m1 = make_runner(k).run(stacked_streams(streams(k, 23, kind, scfg)))
+    m8 = make_runner(k, superchunk=8).run(
+        stacked_streams(streams(k, 23, kind, scfg)))
+    assert_metrics_identical(m1, m8)
+
+
+def test_scanned_escalation_differential():
+    """Overflow escalation (truncated joins re-run at pow2 capacity) fires
+    identically through the scanned plane — the acceptance criterion's
+    'including under overflow escalation' clause."""
+    k = 4
+    cfg = EngineConfig(b_cap=32, m_cap=32)
+    m1 = make_runner(k, engine_cfg=cfg).run(
+        stacked_streams(streams(k, seed=7)))
+    m8 = make_runner(k, superchunk=8, engine_cfg=cfg).run(
+        stacked_streams(streams(k, seed=7)))
+    assert m1.escalations > 0  # the capacity must actually truncate
+    assert_metrics_identical(m1, m8)
+
+
+def test_serving_superchunk_matches_step():
+    """Incremental plane: step_superchunk == a loop of step ticks, for the
+    monitored (flag -> immediate replan) serving front."""
+    k = 4
+    a = cep.open(PATTERN, partitions=k, plan="order", monitor=True,
+                 config=CONFIG)
+    b = cep.open(PATTERN, partitions=k, plan="order", monitor=True,
+                 config=CONFIG, superchunk=4)
+    recs = list(stacked_streams(streams(k, seed=31)))
+    got_a = np.stack([a.step(fc.chunk, fc.t0, fc.t1) for fc in recs])
+    got_b = b.step_superchunk([fc.chunk for fc in recs],
+                              [(fc.t0, fc.t1) for fc in recs])
+    assert got_a.tolist() == got_b.tolist()
+    ta, tb = a.telemetry(), b.telemetry()
+    for f in ("matches", "violations", "replans", "host_syncs", "overflow"):
+        assert getattr(ta, f) == getattr(tb, f), f
+    assert tb.violations > 0
+    assert np.array_equal(ta.last_drift, tb.last_drift)
+
+
+def test_serving_superchunk_plain():
+    """Unmonitored serving front: static plans mean every window is one
+    dispatch; counts must equal per-tick stepping."""
+    k = 2
+    a = cep.open(PATTERN, partitions=k, plan="order",
+                 config=dataclasses.replace(CONFIG, policy=None))
+    b = cep.open(PATTERN, partitions=k, plan="order",
+                 config=dataclasses.replace(CONFIG, policy=None,
+                                            superchunk=4))
+    recs = list(stacked_streams(streams(k, seed=5)))
+    got_a = np.stack([a.step(fc.chunk, fc.t0, fc.t1) for fc in recs])
+    got_b = b.step_superchunk([fc.chunk for fc in recs],
+                              [(fc.t0, fc.t1) for fc in recs])
+    assert got_a.tolist() == got_b.tolist()
+    assert a.telemetry().matches == b.telemetry().matches
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet (shard_map over the cep mesh axis)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_d1_run_smoke():
+    """A single-device mesh runs the identical shard_map code path the
+    multi-device deployment uses; results must match the unsharded run."""
+    k = 4
+    plain = make_runner(k, superchunk=8).run(stacked_streams(streams(k)))
+    shard = make_runner(k, superchunk=8, mesh=1).run(
+        stacked_streams(streams(k)))
+    assert_metrics_identical(plain, shard)
+
+
+def test_sharded_d1_serving_smoke():
+    k = 2
+    recs = list(stacked_streams(streams(k, seed=31)))
+    plain = cep.open(PATTERN, partitions=k, plan="order", monitor=True,
+                     config=CONFIG, superchunk=4)
+    # mesh=1 rather than "auto": K=2 need not divide an arbitrary local
+    # device count, and D=1 runs the same shard_map code path.
+    shard = cep.open(PATTERN, partitions=k, plan="order", monitor=True,
+                     config=CONFIG, superchunk=4, mesh=1)
+    chunks = [fc.chunk for fc in recs]
+    edges = [(fc.t0, fc.t1) for fc in recs]
+    assert plain.step_superchunk(chunks, edges).tolist() == \
+        shard.step_superchunk(chunks, edges).tolist()
+
+
+def test_mesh_validation():
+    import jax
+
+    d = len(jax.devices())
+    mesh = cep_mesh()
+    assert resolve_cep_mesh(None, 4) is None
+    assert resolve_cep_mesh("auto", 4 * d).shape["cep"] == d
+    assert resolve_cep_mesh(mesh, 4 * d) is mesh
+    with pytest.raises(ValueError, match="cep"):
+        from jax.sharding import Mesh
+        import jax
+        resolve_cep_mesh(Mesh(np.asarray(jax.devices()[:1]), ("data",)), 4)
+    with pytest.raises(TypeError):
+        resolve_cep_mesh(3.5, 4)
+    with pytest.raises(ValueError, match="devices"):
+        cep_mesh(4096)
+
+
+def test_superchunk_requires_monitor_on_batch_plane():
+    sess = cep.open(PATTERN, partitions=2, plan="order", superchunk=8)
+    with pytest.raises(ValueError, match="monitor=True"):
+        sess.run(streams(2))
+
+
+def test_superchunk_config_validation():
+    with pytest.raises(ValueError, match="superchunk"):
+        RuntimeConfig(superchunk=0)
+
+
+@pytest.mark.slow
+def test_sharded_d2_subprocess():
+    """True multi-device sharding: force a 2-device CPU platform in a
+    subprocess (the flag must be set before jax initializes) and assert
+    the D=2 scanned run is bit-identical to the unsharded one."""
+    script = textwrap.dedent("""
+        import dataclasses, warnings
+        import jax
+        import numpy as np
+        from repro import cep
+        from repro.cep import P, RuntimeConfig
+        from repro.data.cep_streams import StreamConfig, make_stream
+
+        assert len(jax.devices()) == 2, jax.devices()
+        pat = (P.seq(0, 1, 2)
+               .where(P.attr(0) < P.attr(1) - 0.3,
+                      P.attr(1) < P.attr(2) - 0.3)
+               .within(4.0))
+        scfg = StreamConfig(n_types=3, n_chunks=10, chunk_cap=128,
+                            base_rate=8.0)
+        cfg = RuntimeConfig(buffer_capacity=64, match_capacity=1024,
+                            max_invariants=8, max_terms=16)
+        def streams(k):
+            return [make_stream("traffic",
+                                dataclasses.replace(scfg, seed=11 + p))
+                    for p in range(k)]
+        # K must divide over the mesh (untestable on a 1-device platform).
+        from repro.distributed.sharding import cep_mesh, resolve_cep_mesh
+        try:
+            resolve_cep_mesh(cep_mesh(2), 3)
+        except ValueError as e:
+            assert "divide" in str(e)
+        else:
+            raise AssertionError("K=3 over D=2 must raise")
+
+        t0 = cep.open(pat, partitions=4, plan="order", monitor=True,
+                      config=cfg, superchunk=8).run(streams(4))
+        t2 = cep.open(pat, partitions=4, plan="order", monitor=True,
+                      config=cfg, superchunk=8, mesh=2).run(streams(4))
+        assert t0.per_partition_matches.tolist() == \\
+            t2.per_partition_matches.tolist()
+        assert t0.violations == t2.violations
+        assert t0.deployments == t2.deployments
+        print("D2OK", t2.per_partition_matches.tolist())
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "D2OK" in res.stdout
