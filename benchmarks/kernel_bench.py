@@ -1,15 +1,51 @@
-"""window_join kernel microbenchmark: jnp oracle vs Pallas (interpret on
-CPU; the pallas path is the TPU deployment target) across join shapes."""
+"""window_join kernel benchmark: packed vs baseline, autotune, roofline.
+
+Sections (all feed ``BENCH_kernel.json``, schema ``kernel_bench/v1`` —
+same record shape as ``BENCH_fleet.json`` rows):
+
+* **packed-vs-baseline trajectory** — the engine-realistic unpacked join
+  (C + 2 float32 validity rows, per-row ``where`` dispatch) against the
+  packed formulation (int8 op strip, validity masks, mask-select,
+  loop-accumulated AND) on the committed shapes.  Self-gating like
+  ``fleet_bench``: packed must be no slower than baseline (tolerance-
+  gated), and in ``--full`` mode at least 1.5x on the (16, 4096, 256)
+  shape.
+* **fused rowcount** — per-m counts via ``window_join_rowcount`` vs
+  materialize-then-``sum(axis=1)``.
+* **scanned-step section** — the superchunk scan with hoisted
+  ``PredicateStrips`` across a chunk-size (S) sweep, plus the
+  kernel-fraction estimate (kernel-only time / scan time) showing the
+  fused step is bound by the join kernel, not operand assembly.
+* **autotune sweep** (``--sweep``) — block_m x block_b over the Pallas
+  kernel per shape class, winners persisted to
+  ``benchmarks/autotune_cache.json`` (``repro.kernels.autotune``).  On
+  CPU the Pallas body runs in interpret mode: entries are written (the
+  table is consulted by shape class + platform) but flagged non-perf.
+
+Interpret-mode timings are NEVER perf claims — the interpret backend is
+a correctness harness (python-executed kernel body); such records carry
+``"perf": false``.
+"""
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import autotune, ops
+
+SHAPES = [(8, 256, 128), (12, 1024, 256), (16, 4096, 256)]
+
+# Packed may not regress vs baseline (CI gate; CPU timer noise allowance).
+GATE_TOLERANCE = 1.15
+# Full-mode gate on the flagship shape (ISSUE 6 acceptance criterion).
+FULL_SPEEDUP_GATE = 1.5
+FULL_GATE_SHAPE = (16, 4096, 256)
 
 
 def bench(fn, *args, iters=20):
@@ -19,39 +55,340 @@ def bench(fn, *args, iters=20):
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    return (time.perf_counter() - t0) / iters  # seconds per call
 
 
-def main(argv=None, quick: bool = False):
+def _case(rng, C, M, B):
+    """One engine-realistic join instance: values, ops, thetas, validity."""
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    op = rng.integers(1, 4, size=(C,)).astype(np.int32)
+    th = rng.normal(scale=0.5, size=(C,)).astype(np.float32)
+    mv = (rng.random(M) > 0.2).astype(np.int8)
+    bv = (rng.random(B) > 0.2).astype(np.int8)
+    return L, R, op, th, mv, bv
+
+
+def _baseline_operands(L, R, op, th, mv, bv):
+    """The pre-packing stack: validity enters as two f32 constraint rows."""
+    C, M = L.shape
+    B = R.shape[1]
+    Lv = np.concatenate(
+        [L, mv[None, :].astype(np.float32), np.ones((1, M), np.float32)])
+    Rv = np.concatenate(
+        [R, np.ones((1, B), np.float32), bv[None, :].astype(np.float32)])
+    opv = np.concatenate([op, [2, 1]]).astype(np.int32)
+    thv = np.concatenate([th, [0.5, 0.5]]).astype(np.float32)
+    return Lv, Rv, opv, thv
+
+
+def _row(shape, config, seconds, cells, **extra):
+    rec = {"shape": f"C{shape[0]}_M{shape[1]}_B{shape[2]}",
+           "config": config, "seconds": round(seconds, 6),
+           "cells": cells,
+           "cells_per_s": round(cells / max(seconds, 1e-12), 1)}
+    rec.update(extra)
+    return rec
+
+
+def bench_shapes(shapes, iters, full, backend):
+    """Packed-vs-baseline + rowcount trajectory; returns (rows, gates)."""
+    rng = np.random.default_rng(0)
+    rows, gates = [], []
+    print("shape,config,us_per_call,cells_per_s,speedup")
+    for shape in shapes:
+        C, M, B = shape
+        cells = M * B
+        L, R, op, th, mv, bv = _case(rng, C, M, B)
+        Lv, Rv, opv, thv = _baseline_operands(L, R, op, th, mv, bv)
+        base_jit = jax.jit(lambda a, b, o, t: ops.window_join(
+            a, b, o, t, backend=backend))
+        pack_jit = jax.jit(
+            lambda a, b, o, t, m_, b_: ops.window_join_packed(
+                a, b, o, t, m_, b_, backend=backend))
+        # Parity first — a fast wrong kernel is not a result.
+        assert (np.asarray(base_jit(Lv, Rv, opv, thv))
+                == np.asarray(pack_jit(L, R, op.astype(np.int8), th,
+                                       mv, bv))).all(), shape
+        t_base = bench(base_jit, Lv, Rv, opv, thv, iters=iters)
+        t_pack = bench(pack_jit, L, R, op.astype(np.int8), th, mv, bv,
+                       iters=iters)
+        speedup = t_base / max(t_pack, 1e-12)
+        rows.append(_row(shape, "baseline_unpacked", t_base, cells))
+        rows.append(_row(shape, "packed", t_pack, cells,
+                         speedup_vs_baseline=round(speedup, 3)))
+        print(f"C{C}_M{M}_B{B},baseline_unpacked,{t_base*1e6:.1f},"
+              f"{cells/t_base:.3g},1.00")
+        print(f"C{C}_M{M}_B{B},packed,{t_pack*1e6:.1f},"
+              f"{cells/t_pack:.3g},{speedup:.2f}", flush=True)
+        gates.append((shape, t_base, t_pack, speedup))
+
+        # Fused per-m rowcount vs materialize + reduce.
+        cnt_base = jax.jit(lambda a, b, o, t: ops.window_join(
+            a, b, o, t, backend=backend).sum(axis=1).astype(jnp.int32))
+        cnt_fuse = jax.jit(lambda a, b, o, t: ops.window_join_rowcount(
+            a, b, o, t, backend=backend))
+        assert (np.asarray(cnt_base(L, R, op, th))
+                == np.asarray(cnt_fuse(L, R, op, th))).all(), shape
+        t_cb = bench(cnt_base, L, R, op, th, iters=iters)
+        t_cf = bench(cnt_fuse, L, R, op, th, iters=iters)
+        rows.append(_row(shape, "rowcount_materialized", t_cb, cells))
+        rows.append(_row(shape, "rowcount_fused", t_cf, cells,
+                         speedup_vs_baseline=round(t_cb / max(t_cf, 1e-12),
+                                                   3)))
+        print(f"C{C}_M{M}_B{B},rowcount_fused,{t_cf*1e6:.1f},"
+              f"{cells/t_cf:.3g},{t_cb/max(t_cf,1e-12):.2f}", flush=True)
+
+        if full:
+            # Interpret mode: correctness harness, one timing for the
+            # record only — explicitly non-perf.
+            t_int = bench(lambda: ops.window_join_packed(
+                L, R, op.astype(np.int8), th, mv, bv,
+                backend="interpret"), iters=1)
+            rows.append(_row(shape, "packed_interpret", t_int, cells,
+                             perf=False))
+    return rows, gates
+
+
+def check_gates(gates, full):
+    for shape, t_base, t_pack, speedup in gates:
+        assert t_pack <= t_base * GATE_TOLERANCE, (
+            f"packed kernel regressed vs baseline on {shape}: "
+            f"{t_pack*1e6:.1f}us vs {t_base*1e6:.1f}us")
+        if full and shape == FULL_GATE_SHAPE:
+            assert speedup >= FULL_SPEEDUP_GATE, (
+                f"packed+cached speedup {speedup:.2f}x < "
+                f"{FULL_SPEEDUP_GATE}x gate on {shape}")
+
+
+def bench_scanned(s_values=(4, 8, 16), k=4, n_windows=3):
+    """Superchunk scan: S sweep, strips-hoist payoff, join fraction.
+
+    Three measurements on the same synthetic fleet: (1) scanned dispatch
+    time across superchunk sizes S; (2) the same scan with the strip
+    derivation left inside the per-chunk body (``plan_operands=None``) vs
+    hoisted once per dispatch; (3) the join-step floor — packed kernel +
+    compaction at the engine shape — to report what fraction of a chunk
+    the join step itself accounts for (the rest is ingest + finalize).
+    """
+    from repro.core.engine import (Chunk, EngineConfig, packed_row_count)
+    from repro.core.fleet import FleetEngine
+    from repro.core.patterns import chain_predicates, seq_pattern
+    from repro.core.scan import (make_superchunk_scan, stack_window,
+                                 static_control)
+
+    pat = seq_pattern([0, 1, 2], 10.0,
+                      chain_predicates([0, 1, 2], theta=0.4))
+    cap, b_cap, m_cap = 48, 128, 256
+    rng = np.random.default_rng(7)
+    fleet = FleetEngine("order", pat, k,
+                        EngineConfig(b_cap=b_cap, m_cap=m_cap))
+    rows_arr = jnp.asarray(
+        np.tile(np.arange(3, dtype=np.int32), (k, 1)))
+
+    def window(s, t_base):
+        chunks, t0s, t1s = [], [], []
+        for i in range(s):
+            t0, t1 = t_base + 2.0 * i, t_base + 2.0 * (i + 1)
+            tid = rng.integers(0, 3, (k, cap)).astype(np.int32)
+            ts = np.sort(rng.uniform(t0, t1, (k, cap)),
+                         axis=1).astype(np.float32)
+            attr = rng.normal(size=(k, cap, 1)).astype(np.float32)
+            chunks.append(Chunk(jnp.asarray(tid), jnp.asarray(ts),
+                                jnp.asarray(attr),
+                                jnp.ones((k, cap), bool)))
+            t0s.append(t0)
+            t1s.append(t1)
+        return stack_window(chunks, t0s, t1s, static_control(k, s), s)
+
+    def time_scan(scan, s):
+        xs = [window(s, 100.0 * w) for w in range(n_windows)]
+        state = fleet.init_state()
+        st, _, _ = scan(state, None, rows_arr, rows_arr, None, xs[0])
+        jax.block_until_ready(st)   # compile + warm outside the clock
+        t0 = time.perf_counter()
+        for x in xs:
+            state, _, _ = scan(state, None, rows_arr, rows_arr, None, x)
+        jax.block_until_ready(state)
+        return (time.perf_counter() - t0) / n_windows
+
+    scan = fleet.superchunk_scan(monitored=False)
+    out_rows = []
+    best = None
+    print("scan_s,chunks,seconds,chunks_per_s")
+    for s in s_values:
+        sec = time_scan(scan, s)
+        per_chunk = sec / s
+        out_rows.append({"shape": f"scan_k{k}_S{s}", "config": "scanned",
+                         "seconds": round(sec, 6), "cells": s * k,
+                         "cells_per_s": round(s * k / max(sec, 1e-12), 1)})
+        print(f"{s},{s*k},{sec:.4f},{s*k/max(sec,1e-12):.1f}", flush=True)
+        if best is None or per_chunk < best[1]:
+            best = (s, per_chunk)
+    s_best, per_chunk_best = best
+
+    # Strip-hoist payoff: identical scan, strips rebuilt inside the body.
+    scan_inbody = make_superchunk_scan(fleet.base.process_fn,
+                                       fleet.base.spec, monitored=False)
+    sec_inbody = time_scan(scan_inbody, s_best)
+    cached_speedup = sec_inbody / max(per_chunk_best * s_best, 1e-12)
+    out_rows.append({"shape": f"scan_k{k}_S{s_best}",
+                     "config": "scanned_strips_inbody",
+                     "seconds": round(sec_inbody, 6),
+                     "cells": s_best * k,
+                     "cells_per_s": round(
+                         s_best * k / max(sec_inbody, 1e-12), 1)})
+    print(f"strips hoisted vs in-body at S={s_best}: "
+          f"{cached_speedup:.2f}x", flush=True)
+
+    # Join-step floor: packed kernel + compaction at the engine shape.
+    spec = fleet.base.spec
+    C = packed_row_count(spec)
+    rk = np.random.default_rng(1)
+    Lk = rk.normal(size=(C, m_cap)).astype(np.float32)
+    Rk = rk.normal(size=(C, b_cap)).astype(np.float32)
+    opk = rk.integers(1, 4, size=C).astype(np.int8)
+    thk = np.full(C, 0.4, np.float32)
+    mvk = np.ones(m_cap, np.int8)
+    bvk = np.ones(b_cap, np.int8)
+    tsk = rk.normal(size=(m_cap, spec.n)).astype(np.float32)
+
+    @jax.jit
+    def join_step(L, R, op, th, mv, bv, ts):
+        ok = ops.window_join_packed(L, R, op, th, mv, bv)
+        flat = ok.reshape(-1)
+        idx = jnp.nonzero(flat, size=m_cap,
+                          fill_value=m_cap * b_cap)[0]
+        valid = jnp.take(flat, idx, mode="fill", fill_value=False)
+        mi = jnp.clip(idx // b_cap, 0, m_cap - 1)
+        return valid, ts[mi], ok.sum()
+
+    t_join = bench(join_step, Lk, Rk, opk, thk, mvk, bvk, tsk, iters=20)
+    joins_per_chunk = k * (spec.n - 1)
+    join_fraction = (joins_per_chunk * t_join) / max(per_chunk_best, 1e-12)
+    print(f"join_fraction at S={s_best}: {join_fraction:.2f} "
+          f"({joins_per_chunk} join steps x {t_join*1e6:.0f}us / "
+          f"{per_chunk_best*1e6:.0f}us chunk)", flush=True)
+    summary = {"best_s": s_best,
+               "per_chunk_s": round(per_chunk_best, 6),
+               "strips_inbody_per_chunk_s": round(sec_inbody / s_best, 6),
+               "cached_strips_speedup": round(cached_speedup, 3),
+               "join_step_s": round(t_join, 6),
+               "joins_per_chunk": joins_per_chunk,
+               "join_fraction": round(join_fraction, 3)}
+    return out_rows, summary
+
+
+def autotune_sweep(shapes, iters=1, table_path=None):
+    """block_m x block_b sweep of the Pallas kernel per shape class.
+
+    On CPU the kernel body runs in interpret mode — entries are written
+    (keyed by platform, so a TPU run never reads them) but flagged
+    non-perf.  Winners land in ``benchmarks/autotune_cache.json``.
+    """
+    plat = autotune.platform()
+    interpret = plat != "tpu"
+    rng = np.random.default_rng(0)
+    entries = dict(autotune.load_table(table_path))
+    results = []
+    for C, M, B in shapes:
+        L, R, op, th, mv, bv = _case(rng, C, M, B)
+        op8 = op.astype(np.int8)
+        best = None
+        for bm in autotune.BLOCK_M_CANDIDATES:
+            if bm > max(M, 8) and bm != autotune.BLOCK_M_CANDIDATES[0]:
+                continue
+            for bb in autotune.BLOCK_B_CANDIDATES:
+                if bb > max(B, 128) and bb != autotune.BLOCK_B_CANDIDATES[0]:
+                    continue
+                from repro.kernels.window_join import \
+                    window_join_packed_pallas
+                try:
+                    sec = bench(
+                        lambda: window_join_packed_pallas(
+                            L, R, op8, th, mv, bv, block_m=bm, block_b=bb,
+                            interpret=interpret),
+                        iters=iters)
+                except Exception as e:  # noqa: BLE001 - skip bad tiles
+                    print(f"  C{C}_M{M}_B{B} bm={bm} bb={bb}: "
+                          f"{type(e).__name__}")
+                    continue
+                if best is None or sec < best[0]:
+                    best = (sec, bm, bb)
+        if best is None:
+            continue
+        sec, bm, bb = best
+        key = f"{plat}/{autotune.shape_class(C, M, B)}"
+        entry = {"block_m": bm, "block_b": bb,
+                 "us": round(sec * 1e6, 1), "kernel": "packed"}
+        if interpret:
+            entry["perf"] = False  # interpret-mode ranking, not a claim
+        entries[key] = entry
+        results.append((key, entry))
+        print(f"{key}: block_m={bm} block_b={bb} ({sec*1e6:.0f}us"
+              f"{' interpret' if interpret else ''})", flush=True)
+    path = autotune.save_table(entries, table_path)
+    print(f"wrote {path}")
+    return results
+
+
+def main(argv=None, quick: bool = False) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default="BENCH_kernel.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="autotune block sizes and update the on-disk "
+                         "table")
+    ap.add_argument("--iters", type=int, default=None)
     args = ap.parse_args(argv)
-    quick = quick or args.quick
-    rng = np.random.default_rng(0)
-    shapes = [(8, 256, 128), (12, 1024, 256), (16, 4096, 256)]
-    if quick:
-        shapes = shapes[:2]
-    print("name,us_per_call,derived")
-    for C, M, B in shapes:
-        L = rng.normal(size=(C, M)).astype(np.float32)
-        R = rng.normal(size=(C, B)).astype(np.float32)
-        op = rng.integers(1, 4, size=(C,)).astype(np.int32)
-        th = rng.normal(scale=0.5, size=(C,)).astype(np.float32)
-        ref_jit = jax.jit(
-            lambda a, b, o, t: ops.window_join(a, b, o, t, backend="ref"))
-        t_ref = bench(lambda: ref_jit(L, R, op, th))
-        cmp_per_s = C * M * B / (t_ref * 1e-6)
-        print(f"window_join_ref_C{C}_M{M}_B{B},{t_ref:.1f},"
-              f"{cmp_per_s:.3g}cmp/s")
-        # interpret mode is a CORRECTNESS harness (python-executed kernel
-        # body); time it once for the record, not as a perf claim.
-        if quick:
-            continue
-        t_int = bench(lambda: ops.window_join(L, R, op, th,
-                                              backend="interpret"),
-                      iters=2)
-        print(f"window_join_interpret_C{C}_M{M}_B{B},{t_int:.1f},"
-              "correctness-harness")
+    quick = (quick or args.quick) and not args.full
+    full = not quick
+    backend = ops.get_backend()
+    shapes = SHAPES if full else SHAPES[:2]
+    iters = args.iters or (20 if quick else 30)
+
+    rows, gates = bench_shapes(shapes, iters, full, backend)
+    scan_rows, scan_summary = bench_scanned(
+        s_values=(4, 8) if quick else (4, 8, 16),
+        n_windows=2 if quick else 3)
+    rows.extend(scan_rows)
+
+    sweep_results = None
+    if args.sweep:
+        sweep_shapes = SHAPES if full else SHAPES[:1]
+        sweep_results = autotune_sweep(sweep_shapes)
+
+    from .roofline import join_roofline
+    roofline = [join_roofline(C, M, B, sec=next(
+        r["seconds"] for r in rows
+        if r["shape"] == f"C{C}_M{M}_B{B}" and r["config"] == "packed"))
+        for (C, M, B) in shapes]
+    for rec in roofline:
+        print(f"roofline {rec['shape']}: {rec['achieved_gbytes_s']:.2f} "
+              f"GB/s achieved vs {rec['peak_gbytes_s']:.0f} peak "
+              f"({rec['fraction_of_roof']:.2f} of roof, "
+              f"{rec['dominant']}-bound)", flush=True)
+
+    check_gates(gates, full)
+
+    if args.json:
+        payload = {
+            "schema": "kernel_bench/v1",
+            "quick": quick,
+            "backend": backend,
+            "platform": autotune.platform(),
+            "rows": rows,
+            "scanned": scan_summary,
+            "roofline": roofline,
+        }
+        if sweep_results:
+            payload["autotune"] = {k: v for k, v in sweep_results}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

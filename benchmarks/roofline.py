@@ -17,6 +17,66 @@ from typing import Dict, List
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
+# Peak envelopes for the join-kernel roofline (order-of-magnitude machine
+# models; override per deployment via env).  TPU numbers are v5e-class;
+# CPU numbers a single-socket container.  The three-term analysis below
+# only needs relative magnitudes to name the dominant term.
+_PEAKS = {
+    "tpu": {"bytes_s": 8.1e11, "flops": 1.97e14},
+    "cpu": {"bytes_s": 2.0e10, "flops": 5.0e10},
+}
+
+
+def join_roofline(C: int, M: int, B: int, sec: float,
+                  platform: str = None) -> dict:
+    """Three-term (compute / memory / collective) model of one packed
+    windowed cross-join, mirroring the dry-run analysis above: each term
+    is the time the operation would take if bound by that resource alone;
+    the largest is the roof.
+
+    Traffic model (packed layout): reads ``C(M+B)`` f32 operand strips,
+    ``C`` int8 ops + ``C`` f32 thetas + ``M+B`` int8 validity, writes the
+    ``MB`` int8 mask.  Work model: 3 comparison planes + the mask-select
+    + the AND accumulate per (c, m, b) cell ~ 5 ops.  Collective bytes
+    are zero — partitions are independent (see ``distributed.sharding``).
+    """
+    import os
+
+    if platform is None:
+        try:
+            import jax
+            platform = jax.devices()[0].platform
+        except Exception:  # pragma: no cover
+            platform = "cpu"
+    peaks = _PEAKS.get(platform, _PEAKS["cpu"])
+    peak_bytes = float(os.environ.get("REPRO_PEAK_BYTES_S",
+                                      peaks["bytes_s"]))
+    peak_flops = float(os.environ.get("REPRO_PEAK_FLOPS", peaks["flops"]))
+    bytes_moved = 4 * C * (M + B) + C + 4 * C + (M + B) + M * B
+    flops = 5 * C * M * B
+    compute_s = flops / peak_flops
+    memory_s = bytes_moved / peak_bytes
+    collective_s = 0.0
+    dominant = "compute" if compute_s >= memory_s else "memory"
+    roof_s = max(compute_s, memory_s)
+    return {
+        "shape": f"C{C}_M{M}_B{B}",
+        "platform": platform,
+        "bytes": bytes_moved,
+        "flops": flops,
+        "intensity_flops_per_byte": round(flops / bytes_moved, 2),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "achieved_gbytes_s": bytes_moved / max(sec, 1e-12) / 1e9,
+        "achieved_gflops_s": flops / max(sec, 1e-12) / 1e9,
+        "peak_gbytes_s": peak_bytes / 1e9,
+        "peak_gflops_s": peak_flops / 1e9,
+        "fraction_of_roof": round(roof_s / max(sec, 1e-12), 4),
+        "seconds": sec,
+    }
+
 
 def load(pattern: str) -> List[dict]:
     out = []

@@ -159,20 +159,10 @@ def _pred_rows(spec, L: MatchSet, R: MatchSet):
     return rows
 
 
-def _join(spec, cfg, L: MatchSet, R: MatchSet, order_rows, out_cap: int):
-    """One plan step: constraint cross-join + compaction."""
+def _compact(L: MatchSet, R: MatchSet, ok, pm_created, out_cap: int):
+    """Prefix-sum compaction of the surviving (m, b) pairs into a MatchSet."""
     m = L.valid.shape[0]
     b = R.valid.shape[0]
-    rows = (
-        _validity_rows(L.valid, R.valid, m, b)
-        + _window_rows(L.min_ts, L.max_ts, R.min_ts, R.max_ts, spec.window)
-        + order_rows
-        + _pred_rows(spec, L, R)
-    )
-    Ls, Rs, ops_, ths = _rows_to_stacks(rows, m, b)
-    ok = kops.window_join(Ls, Rs, ops_, ths, backend=cfg.backend)
-    pm_created = ok.sum().astype(jnp.int32)
-
     flat = ok.reshape(-1)
     idx = jnp.nonzero(flat, size=out_cap, fill_value=m * b)[0]
     new_valid = jnp.take(flat, idx, mode="fill", fill_value=False)
@@ -194,11 +184,30 @@ def _join(spec, cfg, L: MatchSet, R: MatchSet, order_rows, out_cap: int):
     return out, pm_created, overflow
 
 
-def _any_match(spec, cfg, L: MatchSet, rows, m, b):
-    """Row-wise 'exists compatible event' (negation veto / Kleene count)."""
+def _join(spec, cfg, L: MatchSet, R: MatchSet, order_rows, out_cap: int):
+    """One plan step: constraint cross-join + compaction."""
+    m = L.valid.shape[0]
+    b = R.valid.shape[0]
+    rows = (
+        _validity_rows(L.valid, R.valid, m, b)
+        + _window_rows(L.min_ts, L.max_ts, R.min_ts, R.max_ts, spec.window)
+        + order_rows
+        + _pred_rows(spec, L, R)
+    )
     Ls, Rs, ops_, ths = _rows_to_stacks(rows, m, b)
     ok = kops.window_join(Ls, Rs, ops_, ths, backend=cfg.backend)
-    return ok
+    pm_created = ok.sum().astype(jnp.int32)
+    return _compact(L, R, ok, pm_created, out_cap)
+
+
+def _row_counts(cfg, rows, m, b):
+    """Per-m 'compatible event' counts (negation veto / Kleene count).
+
+    Routed through the fused rowcount kernel, which reduces each tile in
+    VMEM instead of materializing the (m, b) mask to HBM."""
+    Ls, Rs, ops_, ths = _rows_to_stacks(rows, m, b)
+    return kops.window_join_rowcount(Ls, Rs, ops_, ths,
+                                     backend=cfg.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -361,8 +370,8 @@ def _finalize(spec: _Spec, cfg: EngineConfig, buffers: Buffers,
         for (pos, op, ma, na, th) in spec.neg_rows:
             rows.append((pm.attr[:, pos, ma], buffers.attr[row][:, na],
                          op, th))
-        ok = _any_match(spec, cfg, pm, rows, m, b)
-        veto = ok.any(axis=1)
+        cnt = _row_counts(cfg, rows, m, b)
+        veto = cnt > 0
         neg_rejected = (completed & veto).sum().astype(jnp.int32)
         completed = completed & ~veto
 
@@ -386,13 +395,134 @@ def _finalize(spec: _Spec, cfg: EngineConfig, buffers: Buffers,
                 rows.append((pm.attr[:, q, spec.a_attr_t[q, kp]],
                              buffers.attr[kp][:, spec.b_attr_t[q, kp]],
                              spec.op_t[q, kp], spec.theta_t[q, kp]))
-        ok = _any_match(spec, cfg, pm, rows, m, b)
-        comp = jnp.maximum(ok.sum(axis=1) - 1, 0)  # exclude the match's own
+        cnt = _row_counts(cfg, rows, m, b)
+        comp = jnp.maximum(cnt - 1, 0)  # exclude the match's own
         if spec.kleene_bound is not None:
             comp = jnp.minimum(comp, spec.kleene_bound)
         closure = jnp.where(completed, comp, 0).sum().astype(jnp.int32)
 
     return completed.sum().astype(jnp.int32), neg_rejected, closure
+
+
+# ---------------------------------------------------------------------------
+# Predicate strips: the plan-constant half of the join operands
+# ---------------------------------------------------------------------------
+#
+# The constraint stack fed to the kernel at plan step ``i`` splits into two
+# halves with very different lifetimes:
+#
+# * **stream-dependent values** (timestamps, attributes, validity) — these
+#   change every chunk and are pure gathers from the ring buffers / match
+#   set;
+# * **plan-dependent structure** (which op applies per row, and which
+#   already-placed position anchors the sequence-order rows) — a function
+#   of the order vector alone, constant for as long as the plan is
+#   deployed.
+#
+# ``PredicateStrips`` captures the second half.  The per-chunk step used to
+# rebuild it inside every trace; precomputing it once per deployed plan
+# (``OrderEngine.plan_operands``) and carrying it through the superchunk
+# scan turns the per-chunk work into gather + kernel.  Thresholds and the
+# attribute gather columns are static pattern data and are baked into the
+# compiled step directly (``_packed_thetas`` / ``_pred_cols``).
+
+
+class PredicateStrips(NamedTuple):
+    """Plan-constant packed join operands for an order plan (n-1 steps)."""
+
+    ops8: jax.Array    # (n-1, C) i8 — per-step op-code strip
+    lo_idx: jax.Array  # (n-1,) i32 — clipped lower order-anchor position
+    hi_idx: jax.Array  # (n-1,) i32 — clipped upper order-anchor position
+
+
+class PlanOperands(NamedTuple):
+    """An order row together with its precomputed strips.
+
+    The engine's ``process`` accepts either the raw row (strips are then
+    derived in-trace — the per-chunk path) or this pair (the scanned path,
+    where the derivation runs once per superchunk dispatch).  Both are
+    pytrees, so the same vmapped/scanned executor serves both.
+    """
+
+    row: jax.Array           # (n,) i32 order vector
+    strips: PredicateStrips
+
+
+def packed_row_count(spec: _Spec) -> int:
+    """Rows in the packed constraint stack (validity lives in the masks)."""
+    return 2 + (2 if spec.is_seq else 0) + 2 * len(spec.pred_pairs)
+
+
+def _packed_thetas(spec: _Spec) -> jnp.ndarray:
+    """Static per-row thresholds matching the packed row layout."""
+    ths = [float(spec.window), float(spec.window)]
+    if spec.is_seq:
+        ths += [0.0, 0.0]
+    for (p, q) in spec.pred_pairs:
+        for (a, b_) in ((p, q), (q, p)):
+            ths.append(float(spec.theta_t[a, b_]))
+    return jnp.asarray(ths, jnp.float32)
+
+
+def _pred_cols(spec: _Spec):
+    """Static (a, b, a_attr_col, b_attr_col) per packed predicate row."""
+    cols = []
+    for (p, q) in spec.pred_pairs:
+        for (a, b_) in ((p, q), (q, p)):
+            cols.append((a, b_, int(spec.a_attr_t[a, b_]),
+                         int(spec.b_attr_t[a, b_])))
+    return tuple(cols)
+
+
+def build_order_strips(spec: _Spec, order) -> PredicateStrips:
+    """Derive the plan-constant strips from an order vector.
+
+    Step ``i`` joins the accumulated prefix {order[0..i-1]} with the leaf
+    of position ``order[i]``; row activation therefore depends only on the
+    order vector: a predicate row (a, b) fires iff ``a`` is already placed
+    and ``b == order[i]``, and the sequence-order rows anchor on the
+    nearest placed position below/above ``order[i]``.  O(n^2) scalar work
+    — negligible once per plan, pure waste once per chunk.
+    """
+    n = spec.n
+    C = packed_row_count(spec)
+    if n <= 1:
+        return PredicateStrips(
+            ops8=jnp.zeros((0, C), jnp.int8),
+            lo_idx=jnp.zeros((0,), jnp.int32),
+            hi_idx=jnp.zeros((0,), jnp.int32))
+    order = jnp.asarray(order, jnp.int32)
+    pos = jnp.arange(n)
+    member = (pos == order[0])
+    ops_steps, lo_steps, hi_steps = [], [], []
+    for i in range(1, n):
+        q = order[i]
+        row_ops = [jnp.asarray(_LT, jnp.int8), jnp.asarray(_GT, jnp.int8)]
+        lo = jnp.int32(0)
+        hi = jnp.int32(0)
+        if spec.is_seq:
+            lo_cand = jnp.where(member & (pos < q), pos, -1)
+            p_lo = lo_cand.max()
+            hi_cand = jnp.where(member & (pos > q), pos, n)
+            p_hi = hi_cand.min()
+            row_ops.append(
+                jnp.where(p_lo >= 0, _LT, _NONE).astype(jnp.int8))
+            row_ops.append(
+                jnp.where(p_hi < n, _GT, _NONE).astype(jnp.int8))
+            lo = jnp.clip(p_lo, 0, n - 1).astype(jnp.int32)
+            hi = jnp.clip(p_hi, 0, n - 1).astype(jnp.int32)
+        for (a, b_, _ac, _bc) in _pred_cols(spec):
+            active = member[a] & (q == b_)
+            row_ops.append(jnp.where(
+                active, jnp.int8(spec.op_t[a, b_]), jnp.int8(_NONE)))
+        ops_steps.append(jnp.stack(row_ops))
+        lo_steps.append(lo)
+        hi_steps.append(hi)
+        member = member | (pos == q)
+    return PredicateStrips(
+        ops8=jnp.stack(ops_steps),
+        lo_idx=jnp.stack(lo_steps),
+        hi_idx=jnp.stack(hi_steps))
 
 
 # ---------------------------------------------------------------------------
@@ -415,38 +545,61 @@ class OrderEngine:
     def init_state(self) -> Buffers:
         return init_buffers(self.spec, self.cfg)
 
+    def plan_operands(self, rows) -> PlanOperands:
+        """Precompute the strips for one (n,) or a stacked (K, n) row set.
+
+        Used by the superchunk scan to hoist the strip derivation out of
+        the per-chunk body — it runs once per scanned dispatch instead of
+        once per chunk.  Traceable (rows may be device arrays).
+        """
+        spec = self.spec
+        rows = jnp.asarray(rows, jnp.int32)
+        if rows.ndim == 1:
+            return PlanOperands(rows, build_order_strips(spec, rows))
+        return jax.vmap(
+            lambda r: PlanOperands(r, build_order_strips(spec, r)))(rows)
+
     def _make_process(self):
         spec, cfg = self.spec, self.cfg
         n = spec.n
+        ths_const = _packed_thetas(spec)
+        pred_cols = _pred_cols(spec)
 
-        def order_rows(pm: MatchSet, q, R: MatchSet):
-            if not spec.is_seq:
-                return []
-            pos = jnp.arange(n)
-            lo_cand = jnp.where(pm.member & (pos < q), pos, -1)
-            p_lo = lo_cand.max()
-            hi_cand = jnp.where(pm.member & (pos > q), pos, n)
-            p_hi = hi_cand.min()
-            lv_lo = pm.ts[:, jnp.clip(p_lo, 0, n - 1)]
-            lv_hi = pm.ts[:, jnp.clip(p_hi, 0, n - 1)]
-            op_lo = jnp.where(p_lo >= 0, _LT, _NONE)
-            op_hi = jnp.where(p_hi < n, _GT, _NONE)
-            return [
-                (lv_lo, R.min_ts, op_lo, 0.0),
-                (lv_hi, R.min_ts, op_hi, 0.0),
-            ]
+        def packed_step(buffers, pm, q, sops, lo, hi, t0):
+            """gather + packed kernel + compaction — one plan step."""
+            R = _leaf(spec, cfg, buffers, q, q, t0, cfg.b_cap)
+            attr_b = buffers.attr[q]
+            Lr = [pm.max_ts, pm.min_ts]
+            Rr = [R.min_ts, R.max_ts]
+            if spec.is_seq:
+                Lr += [pm.ts[:, lo], pm.ts[:, hi]]
+                Rr += [R.min_ts, R.min_ts]
+            for (a, _b, ac, bc) in pred_cols:
+                Lr.append(pm.attr[:, a, ac])
+                Rr.append(attr_b[:, bc])
+            Ls = jnp.stack([x.astype(jnp.float32) for x in Lr])
+            Rs = jnp.stack([x.astype(jnp.float32) for x in Rr])
+            ok = kops.window_join_packed(Ls, Rs, sops, ths_const,
+                                         pm.valid, R.valid,
+                                         backend=cfg.backend)
+            created = ok.sum().astype(jnp.int32)
+            return _compact(pm, R, ok, created, cfg.m_cap)
 
-        def process(buffers: Buffers, chunk: Chunk, order, t0, t1,
+        def process(buffers: Buffers, chunk: Chunk, plan, t0, t1,
                     born_lo, born_hi):
+            if isinstance(plan, PlanOperands):
+                order, strips = plan.row, plan.strips
+            else:
+                order = plan
+                strips = build_order_strips(spec, order)
             buffers = _ingest(spec, cfg, buffers, chunk)
             pm = _leaf(spec, cfg, buffers, order[0], order[0], t0, cfg.m_cap)
             pm_total = pm.valid.sum().astype(jnp.int32)
             overflow = jnp.int32(0)
             for i in range(1, n):  # static loop over plan steps
-                q = order[i]
-                R = _leaf(spec, cfg, buffers, q, q, t0, cfg.b_cap)
-                rows = order_rows(pm, q, R)
-                pm, created, ov = _join(spec, cfg, pm, R, rows, cfg.m_cap)
+                pm, created, ov = packed_step(
+                    buffers, pm, order[i], strips.ops8[i - 1],
+                    strips.lo_idx[i - 1], strips.hi_idx[i - 1], t0)
                 pm_total = pm_total + created
                 overflow = overflow + ov
             full, neg_rej, closure = _finalize(

@@ -265,7 +265,8 @@ class FleetEngine:
         if monitored not in self._scans:
             self._scans[monitored] = make_superchunk_scan(
                 self.base.process_fn, self.base.spec, monitored,
-                self.monitor_laplace, mesh=self.mesh)
+                self.monitor_laplace, mesh=self.mesh,
+                plan_operands=getattr(self.base, "plan_operands", None))
         return self._scans[monitored]
 
 

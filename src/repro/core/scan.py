@@ -95,7 +95,8 @@ class SuperchunkOut(NamedTuple):
 
 
 def make_superchunk_scan(process_fn, spec, monitored: bool,
-                         laplace: float = 1.0, mesh=None):
+                         laplace: float = 1.0, mesh=None,
+                         plan_operands=None):
     """Build the compiled superchunk scan for one engine configuration.
 
     Returns ``scan(buffers, monitor, cur_rows, old_rows, lowered, xs) ->
@@ -105,6 +106,14 @@ def make_superchunk_scan(process_fn, spec, monitored: bool,
     step (``monitor``/``lowered`` may be ``None`` otherwise).  With
     ``mesh`` the whole scan is ``shard_map``-ped over the mesh's ``cep``
     axis — one dispatch drives D devices for S chunks with no collectives.
+
+    ``plan_operands`` (engines that support it) maps stacked plan rows to
+    their precomputed join operands (e.g. ``OrderEngine.plan_operands``);
+    it runs inside the compiled scan but OUTSIDE the ``lax.scan`` body, so
+    the plan-constant operand strips are derived once per dispatch and the
+    per-chunk step is reduced to gather + kernel.  Strips are a per-row
+    function, so blending cur/old per chunk leaf-wise commutes with the
+    derivation — per-chunk semantics stay bit-identical.
     """
     n = spec.n
     process = jax.vmap(process_fn)
@@ -119,8 +128,12 @@ def make_superchunk_scan(process_fn, spec, monitored: bool,
             t1v = jnp.broadcast_to(x.t1.astype(jnp.float32), (kk,))
             neg_v = jnp.full((kk,), NEG_INF, jnp.float32)
             pos_v = jnp.full((kk,), POS_INF, jnp.float32)
-            sel_b = x.old_sel.reshape((kk,) + (1,) * (cur_rows.ndim - 1))
-            old_eff = jnp.where(sel_b, cur_rows, old_rows)
+
+            def blend(c, o):  # per-partition row select (pytree-safe)
+                sel = x.old_sel.reshape((kk,) + (1,) * (c.ndim - 1))
+                return jnp.where(sel, c, o)
+
+            old_eff = jax.tree.map(blend, cur_rows, old_rows)
 
             # Pass A: current plans ingest the chunk; completed matches
             # restricted to those born at/after each partition's replan.
@@ -177,6 +190,10 @@ def make_superchunk_scan(process_fn, spec, monitored: bool,
         return jax.lax.cond(x.enabled, run, skip, carry)
 
     def scan_fn(buffers, monitor, cur_rows, old_rows, lowered, xs):
+        if plan_operands is not None:
+            # Hoisted: once per superchunk dispatch, not once per chunk.
+            cur_rows = plan_operands(cur_rows)
+            old_rows = plan_operands(old_rows)
         carry, ys = jax.lax.scan(
             functools.partial(body, cur_rows, old_rows, lowered),
             (buffers, monitor), xs)

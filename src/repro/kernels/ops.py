@@ -16,7 +16,12 @@ from __future__ import annotations
 import jax
 
 from . import ref as _ref
-from .window_join import window_join_count_pallas, window_join_pallas
+from .window_join import (
+    window_join_count_pallas,
+    window_join_packed_pallas,
+    window_join_pallas,
+    window_join_rowcount_pallas,
+)
 
 _BACKEND = None
 
@@ -62,4 +67,34 @@ def window_join_count(L, R, ops, thetas, *, backend: str | None = None):
         return window_join_count_pallas(L, R, ops, thetas)
     if be == "interpret":
         return window_join_count_pallas(L, R, ops, thetas, interpret=True)
+    raise ValueError(f"unknown kernel backend {be!r}")
+
+
+def window_join_packed(L, R, ops8, thetas, mvalid, bvalid, *,
+                       backend: str | None = None):
+    """Packed-strip join: validity as int8 vectors, op dispatch as
+    mask-select — bit-identical to ``window_join`` over the equivalent
+    unpacked stack (validity encoded as two extra f32 rows)."""
+    be = backend or get_backend()
+    if be == "ref":
+        return _ref.window_join_packed_ref(L, R, ops8, thetas, mvalid,
+                                           bvalid)
+    if be == "pallas":
+        return window_join_packed_pallas(L, R, ops8, thetas, mvalid, bvalid)
+    if be == "interpret":
+        return window_join_packed_pallas(L, R, ops8, thetas, mvalid, bvalid,
+                                         interpret=True)
+    raise ValueError(f"unknown kernel backend {be!r}")
+
+
+def window_join_rowcount(L, R, ops, thetas, *, backend: str | None = None):
+    """Per-m row counts — (M,) i32 — without materializing (M, B)."""
+    be = backend or get_backend()
+    if be == "ref":
+        return _ref.window_join_rowcount_ref(L, R, ops, thetas)
+    if be == "pallas":
+        return window_join_rowcount_pallas(L, R, ops, thetas)
+    if be == "interpret":
+        return window_join_rowcount_pallas(L, R, ops, thetas,
+                                           interpret=True)
     raise ValueError(f"unknown kernel backend {be!r}")

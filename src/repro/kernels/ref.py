@@ -42,3 +42,58 @@ def window_join_ref(L, R, ops, thetas):
     op = ops[:, None, None]
     th = thetas[:, None, None]
     return jnp.all(cmp_op(op, l, r, th), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Packed operand layout (mirrors the packed Pallas kernel)
+# ---------------------------------------------------------------------------
+#
+# The packed form replaces the per-row op dispatch (three nested selects on
+# an int32 code) with a mask-select on precomputed comparison planes, and
+# pulls row-validity out of the constraint stack into two int8 vectors that
+# are AND-ed straight into the accumulator.  The float comparisons are the
+# EXACT expressions of ``cmp_op`` — ``l < r + th`` / ``l > r - th`` /
+# ``|l - r| <= th`` — so packed and unpacked evaluation are bit-identical
+# (required: the engine's differential tests pin match counts across the
+# kernel switch).
+#
+# The reduction is loop-accumulated over the (static) constraint dim: the
+# working set stays one (M, B) boolean plane instead of a (C, M, B) stack,
+# which is also what makes XLA fuse the whole chain into a single pass.
+
+
+def window_join_packed_ref(L, R, ops8, thetas, mvalid, bvalid):
+    """Packed oracle: ok[m, b] = mvalid & bvalid & AND_c row_c.
+
+    L: (C, M) f32, R: (C, B) f32, ops8: (C,) i8, thetas: (C,) f32,
+    mvalid: (M,) i8/bool, bvalid: (B,) i8/bool.  Returns (M, B) bool.
+    """
+    acc = (mvalid > 0)[:, None] & (bvalid > 0)[None, :]
+    C = L.shape[0]
+    for c in range(C):  # static unroll; keeps the working set at (M, B)
+        l = L[c][:, None]
+        r = R[c][None, :]
+        th = thetas[c]
+        o = ops8[c]
+        lt = l < r + th
+        gt = l > r - th
+        ab = jnp.abs(l - r) <= th
+        ok = (lt & (o == 1)) | (gt & (o == 2)) | (ab & (o == 3)) | (o == 0)
+        acc = acc & ok
+    return acc
+
+
+def window_join_rowcount_ref(L, R, ops, thetas):
+    """Per-m surviving-pair counts: cnt[m] = sum_b AND_c row_c[m, b].
+
+    Same reduction as ``window_join_ref(...).sum(axis=1)`` but
+    loop-accumulated so no (C, M, B) stack is materialized.  Feeds the
+    negation veto (cnt > 0) and Kleene companion counts (cnt - 1) of the
+    engine's finalize pass.
+    """
+    C, M = L.shape
+    acc = jnp.ones((M, R.shape[1]), bool)
+    for c in range(C):
+        ok = cmp_op(ops[c], L[c][:, None], R[c][None, :], thetas[c])
+        acc = acc & ok
+    return acc.sum(axis=1).astype(jnp.int32)

@@ -34,6 +34,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import autotune as _autotune
+from . import ref as _ref
+
+
+def _resolve_blocks(C, M, B, block_m, block_b):
+    """Static block sizes: explicit caller pins win, else the autotune
+    table (per shape-class, per platform), else (128, 128)."""
+    if block_m is None or block_b is None:
+        abm, abb = _autotune.best_blocks(C, M, B)
+        block_m = block_m if block_m is not None else abm
+        block_b = block_b if block_b is not None else abb
+    return block_m, block_b
+
+
+def _tile_waste(M, B, bm, bb) -> bool:
+    """True when the padded grid does mostly-padding work: below one
+    (8, 128) tile of real cells, or >= 4x padding blow-up (the B=4
+    pathology: a 4-wide buffer pads to a full 128-lane tile, ~32x waste).
+    Such shapes dispatch to the fused jnp reference instead — on small
+    operands XLA's fusion beats a mostly-padded Pallas launch."""
+    Mp = (M + bm - 1) // bm * bm
+    Bp = (B + bb - 1) // bb * bb
+    return (M * B < 8 * 128) or (Mp * Bp >= 4 * M * B)
+
 
 def _kernel(l_ref, r_ref, op_ref, th_ref, out_ref):
     C = l_ref.shape[0]
@@ -64,8 +88,8 @@ def window_join_pallas(
     ops: jax.Array,
     thetas: jax.Array,
     *,
-    block_m: int = 128,
-    block_b: int = 128,
+    block_m: int | None = None,
+    block_b: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Tiled Pallas evaluation of the constraint cross-join.
@@ -73,11 +97,18 @@ def window_join_pallas(
     L: (C, M) f32, R: (C, B) f32, ops: (C,) i32, thetas: (C,) f32.
     Returns ok: (M, B) bool.  M and B are padded up to tile multiples
     internally; padding garbage is sliced away before returning.
+    Block sizes default to the autotune table for the shape class.
+    Interpret mode always runs the kernel body (it is the correctness
+    harness); compiled mode falls back to the jnp reference for shapes
+    that would be mostly tile padding.
     """
     C, M = L.shape
     _, B = R.shape
+    block_m, block_b = _resolve_blocks(C, M, B, block_m, block_b)
     bm = min(block_m, max(M, 8))
     bb = min(block_b, max(B, 128))
+    if not interpret and _tile_waste(M, B, bm, bb):
+        return _ref.window_join_ref(L, R, ops, thetas)
     Mp = (M + bm - 1) // bm * bm
     Bp = (B + bb - 1) // bb * bb
     if Mp != M:
@@ -144,14 +175,18 @@ def _count_kernel(l_ref, r_ref, op_ref, th_ref, out_ref, *, m_valid, b_valid):
     jax.jit, static_argnames=("block_m", "block_b", "interpret")
 )
 def window_join_count_pallas(
-    L, R, ops, thetas, *, block_m: int = 128, block_b: int = 128,
-    interpret: bool = False,
+    L, R, ops, thetas, *, block_m: int | None = None,
+    block_b: int | None = None, interpret: bool = False,
 ) -> jax.Array:
     """Total number of matching (m, b) pairs, computed tile-locally."""
     C, M = L.shape
     _, B = R.shape
+    block_m, block_b = _resolve_blocks(C, M, B, block_m, block_b)
     bm = min(block_m, max(M, 8))
     bb = min(block_b, max(B, 128))
+    if not interpret and _tile_waste(M, B, bm, bb):
+        return _ref.window_join_ref(L, R, ops, thetas).sum(
+            dtype=jnp.int32)
     Mp = (M + bm - 1) // bm * bm
     Bp = (B + bb - 1) // bb * bb
     # Padding exactness: the kernel masks every (m, b) cell against the true
@@ -183,3 +218,184 @@ def window_join_count_pallas(
         thetas.astype(jnp.float32),
     )
     return counts.sum()
+
+
+# ---------------------------------------------------------------------------
+# Packed operand layout
+# ---------------------------------------------------------------------------
+#
+# The packed variants take the engine's cached-strip layout:
+#
+# * op-codes enter as an ``int8`` strip and each constraint row is a
+#   mask-select over the three precomputed comparison planes —
+#   ``(lt & is_lt) | (gt & is_gt) | (ab & is_ab) | is_none`` — instead of
+#   the unpacked kernel's nested ``jnp.where`` dispatch;
+# * row-validity enters as two ``int8`` vectors seeding the accumulator,
+#   not as two float32 constraint rows — the constraint stack shrinks by
+#   two planes and, because padding extends the validity vectors with
+#   zeros, padded (m, b) cells are excluded by construction (no iota
+#   masking needed, for ANY op mix);
+# * the AND-reduction accumulates in bool/int8 vregs throughout.
+#
+# The float comparisons are the exact unpacked expressions, so packed and
+# unpacked agree bit-for-bit — the property the engine's differential
+# tests pin across the kernel switch.
+
+
+def _packed_kernel(l_ref, r_ref, op_ref, th_ref, mv_ref, bv_ref, out_ref):
+    C = l_ref.shape[0]
+    mv = mv_ref[0, :] > 0                     # (bm,)
+    bv = bv_ref[0, :] > 0                     # (bb,)
+    acc = mv[:, None] & bv[None, :]           # (bm, bb) bool
+    for c in range(C):  # static unroll over the small constraint dim
+        l = l_ref[c, :][:, None]
+        r = r_ref[c, :][None, :]
+        op = op_ref[c]
+        th = th_ref[c]
+        lt = l < r + th
+        gt = l > r - th
+        ab = jnp.abs(l - r) <= th
+        ok = (lt & (op == 1)) | (gt & (op == 2)) | (ab & (op == 3)) \
+            | (op == 0)
+        acc = jnp.logical_and(acc, ok)
+    out_ref[...] = acc.astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_b", "interpret")
+)
+def window_join_packed_pallas(
+    L, R, ops8, thetas, mvalid, bvalid, *, block_m: int | None = None,
+    block_b: int | None = None, interpret: bool = False,
+) -> jax.Array:
+    """Packed-strip cross-join: ok[m, b] = mvalid & bvalid & AND_c row_c.
+
+    L: (C, M) f32, R: (C, B) f32, ops8: (C,) i8, thetas: (C,) f32,
+    mvalid: (M,), bvalid: (B,) i8/bool.  Returns (M, B) bool.
+    """
+    C, M = L.shape
+    _, B = R.shape
+    block_m, block_b = _resolve_blocks(C, M, B, block_m, block_b)
+    bm = min(block_m, max(M, 8))
+    bb = min(block_b, max(B, 128))
+    if not interpret and _tile_waste(M, B, bm, bb):
+        return _ref.window_join_packed_ref(L, R, ops8, thetas, mvalid,
+                                           bvalid)
+    Mp = (M + bm - 1) // bm * bm
+    Bp = (B + bb - 1) // bb * bb
+    if Mp != M:
+        L = jnp.pad(L, ((0, 0), (0, Mp - M)))
+    if Bp != B:
+        R = jnp.pad(R, ((0, 0), (0, Bp - B)))
+    # Validity doubles as the padding mask: padded slots are invalid rows.
+    mv = jnp.pad(mvalid.astype(jnp.int8), (0, Mp - M))[None, :]
+    bv = jnp.pad(bvalid.astype(jnp.int8), (0, Bp - B))[None, :]
+
+    grid = (Mp // bm, Bp // bb)
+    out = pl.pallas_call(
+        _packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((C, bb), lambda i, j: (0, j)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+            pl.BlockSpec((1, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((1, bb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Bp), jnp.int8),
+        interpret=interpret,
+    )(
+        L.astype(jnp.float32),
+        R.astype(jnp.float32),
+        ops8.astype(jnp.int8),
+        thetas.astype(jnp.float32),
+        mv,
+        bv,
+    )
+    return out[:M, :B].astype(jnp.bool_)
+
+
+def _rowcount_kernel(l_ref, r_ref, op_ref, th_ref, out_ref, *, b_valid):
+    """Per-m surviving-pair counts, accumulated across the B-tile grid.
+
+    The (bm, bb) mask never leaves VMEM: each tile reduces over its lanes
+    and accumulates into the (bm, 1) output block, which the sequential
+    j-sweep of the grid revisits.  ``b_valid`` (true B extent, static)
+    masks lane padding; m padding needs no mask — the wrapper slices it.
+    """
+    C = l_ref.shape[0]
+    bm = l_ref.shape[1]
+    bb = r_ref.shape[1]
+    j = pl.program_id(1)
+    bi = j * bb + jax.lax.broadcasted_iota(jnp.int32, (bm, bb), 1)
+    acc = bi < b_valid
+    for c in range(C):
+        l = l_ref[c, :][:, None]
+        r = r_ref[c, :][None, :]
+        op = op_ref[c]
+        th = th_ref[c]
+        lt = l < r + th
+        gt = l > r - th
+        ab = jnp.abs(l - r) <= th
+        ok = (lt & (op == 1)) | (gt & (op == 2)) | (ab & (op == 3)) \
+            | (op == 0)
+        acc = jnp.logical_and(acc, ok)
+    partial = acc.astype(jnp.int32).sum(axis=1, keepdims=True)  # (bm, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _accum():
+        out_ref[...] = out_ref[...] + partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_b", "interpret")
+)
+def window_join_rowcount_pallas(
+    L, R, ops, thetas, *, block_m: int | None = None,
+    block_b: int | None = None, interpret: bool = False,
+) -> jax.Array:
+    """Fused per-m row counts: cnt[m] = sum_b AND_c cmp(...) — (M,) i32.
+
+    What the finalize pass actually consumes for negation (cnt > 0) and
+    Kleene closure (cnt - 1): the (M, B) mask is reduced tile-locally and
+    never materialized to HBM.
+    """
+    C, M = L.shape
+    _, B = R.shape
+    block_m, block_b = _resolve_blocks(C, M, B, block_m, block_b)
+    bm = min(block_m, max(M, 8))
+    bb = min(block_b, max(B, 128))
+    if not interpret and _tile_waste(M, B, bm, bb):
+        return _ref.window_join_rowcount_ref(L, R, ops, thetas)
+    Mp = (M + bm - 1) // bm * bm
+    Bp = (B + bb - 1) // bb * bb
+    if Mp != M:
+        L = jnp.pad(L, ((0, 0), (0, Mp - M)))
+    if Bp != B:
+        R = jnp.pad(R, ((0, 0), (0, Bp - B)))
+    grid = (Mp // bm, Bp // bb)
+    counts = pl.pallas_call(
+        functools.partial(_rowcount_kernel, b_valid=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((C, bb), lambda i, j: (0, j)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, 1), jnp.int32),
+        interpret=interpret,
+    )(
+        L.astype(jnp.float32),
+        R.astype(jnp.float32),
+        ops.astype(jnp.int32),
+        thetas.astype(jnp.float32),
+    )
+    return counts[:M, 0]

@@ -1,0 +1,346 @@
+"""Packed / rowcount kernel variants, block-size grids, autotune table,
+and the cached predicate-strip path of the order engine.
+
+Parity contract: the packed kernel must agree BIT-FOR-BIT with the
+unpacked kernel over the equivalent stack (validity encoded as two f32
+constraint rows), for every block tiling, op mix and shape — that is the
+property that lets the engine switch kernels without perturbing a single
+counter (asserted end-to-end by the superchunk differential tests).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops
+from repro.kernels.ref import (window_join_packed_ref, window_join_ref,
+                               window_join_rowcount_ref)
+from repro.kernels.window_join import (window_join_count_pallas,
+                                       window_join_packed_pallas,
+                                       window_join_pallas,
+                                       window_join_rowcount_pallas)
+
+
+def _case(rng, C, M, B):
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    op = rng.integers(0, 4, size=(C,)).astype(np.int32)
+    th = rng.normal(scale=0.5, size=(C,)).astype(np.float32)
+    mv = (rng.random(M) > 0.3).astype(np.int8)
+    bv = (rng.random(B) > 0.3).astype(np.int8)
+    return L, R, op, th, mv, bv
+
+
+def _unpacked_equiv(L, R, op, th, mv, bv):
+    """Validity as two f32 rows — the pre-packing engine encoding."""
+    C, M = L.shape
+    B = R.shape[1]
+    Lv = np.concatenate(
+        [L, mv[None, :].astype(np.float32), np.ones((1, M), np.float32)])
+    Rv = np.concatenate(
+        [R, np.ones((1, B), np.float32), bv[None, :].astype(np.float32)])
+    opv = np.concatenate([op, [2, 1]]).astype(np.int32)
+    thv = np.concatenate([th, [0.5, 0.5]]).astype(np.float32)
+    return np.asarray(window_join_ref(Lv, Rv, opv, thv))
+
+
+# ---------------------------------------------------------------------------
+# Packed kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,M,B", [
+    (1, 1, 1), (2, 7, 5), (4, 128, 128), (9, 130, 257),
+    (16, 64, 300), (32, 256, 384),
+])
+def test_packed_matches_unpacked_and_interpret(C, M, B, rng):
+    L, R, op, th, mv, bv = _case(rng, C, M, B)
+    want = _unpacked_equiv(L, R, op, th, mv, bv)
+    got_ref = np.asarray(ops.window_join_packed(
+        L, R, op.astype(np.int8), th, mv, bv, backend="ref"))
+    got_int = np.asarray(ops.window_join_packed(
+        L, R, op.astype(np.int8), th, mv, bv, backend="interpret"))
+    assert (want == got_ref).all()
+    assert (want == got_int).all()
+
+
+@pytest.mark.parametrize("bm,bb", [(8, 128), (32, 128), (128, 128),
+                                   (128, 256), (256, 128)])
+def test_packed_block_grid_parity(bm, bb, rng):
+    """Every block tiling must give the identical mask (non-multiple
+    M/B exercises the padded edge tiles; validity doubles as padding)."""
+    C, M, B = 5, 130, 140
+    L, R, op, th, mv, bv = _case(rng, C, M, B)
+    want = np.asarray(window_join_packed_ref(L, R, op.astype(np.int8),
+                                             th, mv, bv))
+    got = np.asarray(window_join_packed_pallas(
+        L, R, op.astype(np.int8), th, mv, bv,
+        block_m=bm, block_b=bb, interpret=True))
+    assert (want == got).all()
+
+
+def test_packed_all_none_ops_respects_validity(rng):
+    """A vacuous-True stack must still be masked by row validity — the
+    padding-exactness regression of PR 5, restated for the packed layout
+    where zero-padded validity IS the padding mask."""
+    C, M, B = 3, 130, 129   # non-multiples: padded edge tiles exist
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    op = np.zeros(C, np.int8)
+    th = np.zeros(C, np.float32)
+    mv = (rng.random(M) > 0.5).astype(np.int8)
+    bv = (rng.random(B) > 0.5).astype(np.int8)
+    got = np.asarray(ops.window_join_packed(L, R, op, th, mv, bv,
+                                            backend="interpret"))
+    want = (mv > 0)[:, None] & (bv > 0)[None, :]
+    assert (got == want).all()
+    assert got.sum() == int(mv.sum()) * int(bv.sum())
+
+
+# ---------------------------------------------------------------------------
+# Rowcount kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,M,B", [
+    (1, 1, 1), (2, 7, 5), (9, 130, 257), (32, 64, 300),
+])
+def test_rowcount_matches_dense_sum(C, M, B, rng):
+    L, R, op, th, _, _ = _case(rng, C, M, B)
+    want = np.asarray(ops.window_join(L, R, op, th,
+                                      backend="ref")).sum(axis=1)
+    got_ref = np.asarray(ops.window_join_rowcount(L, R, op, th,
+                                                  backend="ref"))
+    got_int = np.asarray(ops.window_join_rowcount(L, R, op, th,
+                                                  backend="interpret"))
+    assert (want == got_ref).all()
+    assert (want == got_int).all()
+
+
+@pytest.mark.parametrize("bm,bb", [(8, 128), (128, 128), (32, 256)])
+def test_rowcount_block_grid_parity(bm, bb, rng):
+    C, M, B = 4, 70, 200
+    L, R, op, th, _, _ = _case(rng, C, M, B)
+    want = np.asarray(window_join_rowcount_ref(L, R, op, th))
+    got = np.asarray(window_join_rowcount_pallas(
+        L, R, op, th, block_m=bm, block_b=bb, interpret=True))
+    assert (want == got).all()
+
+
+def test_rowcount_all_none_ops_counts_true_extent(rng):
+    """Vacuous-True rows: each m must count exactly B (never the padded
+    lane extent) across the j-accumulating grid."""
+    C, M, B = 2, 130, 140
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    got = np.asarray(window_join_rowcount_pallas(
+        L, R, np.zeros(C, np.int32), np.zeros(C, np.float32),
+        block_m=128, block_b=128, interpret=True))
+    assert (got == B).all()
+
+
+# ---------------------------------------------------------------------------
+# Unpacked kernels: block-size grid (previously only default blocks)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bm,bb", [(8, 128), (128, 128), (256, 128)])
+def test_unpacked_block_grid_parity(bm, bb, rng):
+    C, M, B = 3, 130, 140
+    L = rng.normal(size=(C, M)).astype(np.float32)
+    R = rng.normal(size=(C, B)).astype(np.float32)
+    op = rng.integers(0, 4, size=C).astype(np.int32)
+    th = rng.normal(scale=0.5, size=C).astype(np.float32)
+    want = np.asarray(window_join_ref(L, R, op, th))
+    got = np.asarray(window_join_pallas(L, R, op, th, block_m=bm,
+                                        block_b=bb, interpret=True))
+    assert (want == got).all()
+    cnt = int(window_join_count_pallas(L, R, op, th, block_m=bm,
+                                       block_b=bb, interpret=True))
+    assert cnt == int(want.sum())
+
+
+# ---------------------------------------------------------------------------
+# Small-shape fast path
+# ---------------------------------------------------------------------------
+
+
+def test_small_shape_fast_path_dispatches_to_ref(rng):
+    """Below a tile's worth of work the pallas entry points return the
+    jnp reference WITHOUT building a pallas_call — so they must work on
+    CPU with interpret=False (where a real pallas lowering would fail)
+    and agree with the oracle exactly."""
+    for (C, M, B) in [(2, 3, 4), (4, 16, 8), (1, 1, 1), (3, 8, 64)]:
+        L, R, op, th, mv, bv = _case(rng, C, M, B)
+        want = np.asarray(window_join_ref(L, R, op, th))
+        got = np.asarray(window_join_pallas(L, R, op, th))
+        assert (want == got).all(), (C, M, B)
+        assert int(window_join_count_pallas(L, R, op, th)) == want.sum()
+        wantp = np.asarray(window_join_packed_ref(
+            L, R, op.astype(np.int8), th, mv, bv))
+        gotp = np.asarray(window_join_packed_pallas(
+            L, R, op.astype(np.int8), th, mv, bv))
+        assert (wantp == gotp).all(), (C, M, B)
+        gotc = np.asarray(window_join_rowcount_pallas(L, R, op, th))
+        assert (gotc == want.sum(axis=1)).all(), (C, M, B)
+
+
+def test_tile_waste_predicate():
+    from repro.kernels.window_join import _tile_waste
+    assert _tile_waste(4, 4, 128, 128)        # tiny: under a tile of work
+    assert _tile_waste(256, 4, 128, 128)      # B=4 pads 32x
+    assert not _tile_waste(256, 128, 128, 128)
+    assert not _tile_waste(4096, 256, 128, 128)
+
+
+# ---------------------------------------------------------------------------
+# Autotune table
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_roundtrip_and_fallback(tmp_path, monkeypatch):
+    path = str(tmp_path / "tab.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", path)
+    autotune.invalidate_cache()
+    try:
+        # Missing table -> default blocks.
+        assert autotune.best_blocks(8, 256, 128, plat="cpu") == (128, 128)
+        key = f"cpu/{autotune.shape_class(8, 256, 128)}"
+        autotune.save_table(
+            {key: {"block_m": 32, "block_b": 256, "us": 1.0,
+                   "kernel": "packed"}}, path)
+        autotune.invalidate_cache()
+        assert autotune.best_blocks(8, 256, 128, plat="cpu") == (32, 256)
+        # Shape-class bucketing: nearby shapes share the pow2 bucket.
+        assert autotune.best_blocks(8, 200, 100, plat="cpu") == (32, 256)
+        # Unknown class / platform -> default.
+        assert autotune.best_blocks(9, 256, 128, plat="cpu") == (128, 128)
+        assert autotune.best_blocks(8, 256, 128, plat="tpu") == (128, 128)
+    finally:
+        autotune.invalidate_cache()
+
+
+def test_autotune_env_disable(monkeypatch):
+    """Empty REPRO_AUTOTUNE_TABLE disables the table entirely."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", "")
+    autotune.invalidate_cache()
+    try:
+        assert autotune.best_blocks(8, 256, 128, plat="cpu") == (128, 128)
+    finally:
+        autotune.invalidate_cache()
+
+
+def test_autotune_corrupt_table_is_ignored(tmp_path, monkeypatch):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as fh:
+        fh.write("{not json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", path)
+    autotune.invalidate_cache()
+    try:
+        assert autotune.load_table(path) == {}
+        assert autotune.best_blocks(8, 256, 128, plat="cpu") == (128, 128)
+    finally:
+        autotune.invalidate_cache()
+
+
+def test_committed_table_schema():
+    """The committed table (if present) must parse and carry the schema
+    the kernel wrappers expect."""
+    import os
+    path = autotune.default_table_path()
+    if not os.path.exists(path):
+        pytest.skip("no committed autotune table")
+    with open(path) as fh:
+        payload = json.load(fh)
+    assert payload["schema"] == "autotune/v1"
+    for key, e in payload["entries"].items():
+        assert "/" in key
+        assert e["block_m"] in autotune.BLOCK_M_CANDIDATES
+        assert e["block_b"] in autotune.BLOCK_B_CANDIDATES
+
+
+# ---------------------------------------------------------------------------
+# Cached predicate strips (order engine)
+# ---------------------------------------------------------------------------
+
+
+def _mk_engine(backend="ref"):
+    from repro.core.engine import EngineConfig, OrderEngine
+    from repro.core.patterns import chain_predicates, seq_pattern
+
+    pat = seq_pattern([0, 1, 2], 10.0,
+                      chain_predicates([0, 1, 2], theta=0.4))
+    return OrderEngine(pat, EngineConfig(b_cap=16, m_cap=32,
+                                         backend=backend))
+
+
+def _mk_chunk(rng, cap=24):
+    from repro.core.engine import Chunk
+
+    tid = rng.integers(0, 3, cap).astype(np.int32)
+    ts = np.sort(rng.uniform(0.0, 4.0, cap)).astype(np.float32)
+    attr = rng.normal(size=(cap, 1)).astype(np.float32)
+    return Chunk(jnp.asarray(tid), jnp.asarray(ts), jnp.asarray(attr),
+                 jnp.ones(cap, bool))
+
+
+@pytest.mark.parametrize("order", [(0, 1, 2), (2, 1, 0), (1, 0, 2)])
+def test_plan_operands_path_bit_identical(order, rng):
+    """process(raw row) and process(PlanOperands) must agree exactly —
+    the strips derivation commutes with hoisting."""
+    import jax
+
+    eng = _mk_engine()
+    chunk = _mk_chunk(rng)
+    row = jnp.asarray(order, jnp.int32)
+    args = (jnp.float32(0.0), jnp.float32(4.0),
+            jnp.float32(-3.0e38), jnp.float32(3.0e38))
+    buf_a, res_a = jax.jit(eng.process_fn)(
+        eng.init_state(), chunk, row, *args)
+    buf_b, res_b = jax.jit(eng.process_fn)(
+        eng.init_state(), chunk, eng.plan_operands(row), *args)
+    for fa, fb in zip(res_a, res_b):
+        assert np.array_equal(np.asarray(fa), np.asarray(fb))
+    for la, lb in zip(buf_a, buf_b):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_build_order_strips_structure():
+    from repro.core.engine import (build_order_strips, packed_row_count)
+
+    eng = _mk_engine()
+    spec = eng.spec
+    C = packed_row_count(spec)
+    # seq + chain predicates (0,1),(1,2): 2 window + 2 order + 4 pred.
+    assert C == 8
+    strips = build_order_strips(spec, jnp.asarray([0, 1, 2], jnp.int32))
+    assert strips.ops8.shape == (2, C)
+    ops8 = np.asarray(strips.ops8)
+    # Window rows are always LT, GT.
+    assert (ops8[:, 0] == 1).all() and (ops8[:, 1] == 2).all()
+    # In-order placement: only the lower order anchor fires.
+    assert (ops8[:, 2] == 1).all() and (ops8[:, 3] == 0).all()
+    assert np.asarray(strips.lo_idx).tolist() == [0, 1]
+    # Step 1 joins leaf 1: pred pair (0,1) is active in the (0,1)
+    # orientation, pair (1,2) is not yet.
+    assert ops8[0, 4] != 0 and ops8[0, 6] == 0
+    # Step 2 joins leaf 2: pair (1,2) active in the (1,2) orientation.
+    assert ops8[1, 6] != 0 and ops8[1, 4] == 0
+
+
+def test_plan_operands_stacked(rng):
+    """The vmapped (fleet) form: strips row k == strips(row k)."""
+    eng = _mk_engine()
+    rows = jnp.asarray([[0, 1, 2], [2, 1, 0]], jnp.int32)
+    po = eng.plan_operands(rows)
+    assert po.row.shape == (2, 3)
+    assert po.strips.ops8.shape[0] == 2
+    for i, order in enumerate([(0, 1, 2), (2, 1, 0)]):
+        one = eng.plan_operands(jnp.asarray(order, jnp.int32))
+        assert np.array_equal(np.asarray(po.strips.ops8[i]),
+                              np.asarray(one.strips.ops8))
+        assert np.array_equal(np.asarray(po.strips.lo_idx[i]),
+                              np.asarray(one.strips.lo_idx))
