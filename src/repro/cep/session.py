@@ -245,6 +245,7 @@ class Session:
         self.planner_name = ("greedy" if self.plan_kind == "order"
                              else "zstream")
         self._serving: Optional[CEPFleetServingEngine] = None
+        self._runner = None  # batch-plane runner, kept for run(resume=True)
 
     # -- composite helpers --------------------------------------------------
 
@@ -285,9 +286,16 @@ class Session:
             return FleetRunner(self.pattern, self.k,
                                sel_samples=cfg.sel_samples, **common)
 
-    def run(self, stream: Stream) -> Telemetry:
+    def run(self, stream: Stream, *, resume: bool = False) -> Telemetry:
         """Consume a chunk stream through the adaptive loop (Algorithm 1
         per partition) and return this run's ``Telemetry``.
+
+        ``resume=True`` continues the previous ``run``'s stream rather
+        than starting a fresh one: ring buffers, estimator/monitor
+        windows, deployed plans and pending invariant flags carry over,
+        so replaying a stream segment-by-segment (with per-segment
+        telemetry) is equivalent to one continuous ``run`` — the replay
+        harness measures each scenario segment exactly this way.
 
         For OR-composites the stream is materialized once and each branch
         runs its own adaptive loop over it; counters aggregate as sums and
@@ -295,7 +303,7 @@ class Session:
         """
         if self.is_composite:
             chunks = list(_normalize_stream(stream, self.k))
-            parts = [b.run(chunks) for b in self.branches]
+            parts = [b.run(chunks, resume=resume) for b in self.branches]
             tel = Telemetry(partitions=self.k)
             for p in parts:
                 tel.merge(p)
@@ -305,8 +313,10 @@ class Session:
             tel.branches = tuple(parts)
             self._tel.merge(dataclasses.replace(tel, branches=None))
             return tel
-        runner = self._make_runner()
-        metrics = runner.run(_normalize_stream(stream, self.k))
+        if not (resume and self._runner is not None):
+            self._runner = self._make_runner()
+        metrics = self._runner.run(_normalize_stream(stream, self.k),
+                                   resume=resume)
         tel = _from_fleet_metrics(metrics, self.k)
         self._tel.merge(tel)
         return tel
@@ -414,8 +424,10 @@ class Session:
         if self.is_composite:
             for b in self.branches:
                 b.reset()
-        elif self._serving is not None:
-            self._serving.reset()
+        else:
+            if self._serving is not None:
+                self._serving.reset()
+            self._runner = None  # next run(resume=True) starts fresh
         self._tel = Telemetry(partitions=self.k)
 
     # -- telemetry ----------------------------------------------------------

@@ -30,11 +30,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Iterable, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Callable, Iterable, List, Optional,
+                    Tuple)
 
 import numpy as np
 
-from ..data.cep_streams import ChunkRecord
+if TYPE_CHECKING:  # annotation-only; a runtime import would be circular
+    # (data.cep_streams imports core.engine, whose package imports us)
+    from ..data.cep_streams import ChunkRecord
+
 from .decision import DecisionPolicy
 from .engine import EngineConfig, OrderEngine, TreeEngine
 from .greedy import greedy_order_plan

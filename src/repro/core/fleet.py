@@ -134,6 +134,25 @@ def stacked_streams(streams: Sequence[Iterable]) -> Iterable[FleetChunk]:
 # Fleet engine (vmapped data plane)
 # ---------------------------------------------------------------------------
 
+# Process-wide trace memo.  FleetEngine instances are cheap and plentiful —
+# escalation ladders, replays, and benchmarks build one per (capacity,
+# monitored) rung — but instances with equal (kind, pattern, k, cfg,
+# monitor_laplace) lower to identical programs, and jax's trace/compile
+# cache hangs off the *callable*, so per-instance ``jax.jit`` pays the
+# multi-second trace again for every rung.  Sharing the jitted callable
+# shares the cache.  Meshed engines are excluded: mesh objects are not
+# value-hashable and shard_map closures pin device orders.
+_TRACE_MEMO: dict = {}
+
+
+def _shared_trace(key, build):
+    if key is None:
+        return build()
+    fn = _TRACE_MEMO.get(key)
+    if fn is None:
+        fn = _TRACE_MEMO[key] = build()
+    return fn
+
 
 class FleetEngine:
     """K partitions through one ``jit(vmap(process))`` of the base engine.
@@ -164,9 +183,18 @@ class FleetEngine:
         # exercise the identical code path on a single device.
         from ..distributed.sharding import resolve_cep_mesh
         self.mesh = resolve_cep_mesh(mesh, self.k)
-        self._process = jax.jit(self._wrap(jax.vmap(self.base.process_fn)))
+        self._process = _shared_trace(
+            self._trace_key("plain"),
+            lambda: jax.jit(self._wrap(jax.vmap(self.base.process_fn))))
         self._mprocess = None  # monitored variant, compiled on first use
         self._scans = {}       # superchunk scans keyed by `monitored`
+
+    def _trace_key(self, flavor):
+        """Memo key for the process-wide trace cache; None = don't share."""
+        if self.mesh is not None:
+            return None
+        return (self.kind, self.pattern, self.k, self.cfg,
+                self.monitor_laplace, flavor)
 
     def _wrap(self, fn):
         """shard_map the vmapped step over the fleet mesh, if any."""
@@ -241,9 +269,12 @@ class FleetEngine:
         syncs stay proportional to violations, not to K.
         """
         if self._mprocess is None:
-            self._mprocess = jax.jit(self._wrap(jax.vmap(
-                make_monitored_process(self.base.process_fn, self.base.spec,
-                                       self.monitor_laplace))))
+            self._mprocess = _shared_trace(
+                self._trace_key("monitored"),
+                lambda: jax.jit(self._wrap(jax.vmap(
+                    make_monitored_process(self.base.process_fn,
+                                           self.base.spec,
+                                           self.monitor_laplace)))))
         plan_arr = (jnp.asarray(plans)
                     if isinstance(plans, (np.ndarray, jnp.ndarray))
                     else self.plans_to_array(plans))
@@ -263,10 +294,12 @@ class FleetEngine:
         from .scan import make_superchunk_scan
 
         if monitored not in self._scans:
-            self._scans[monitored] = make_superchunk_scan(
-                self.base.process_fn, self.base.spec, monitored,
-                self.monitor_laplace, mesh=self.mesh,
-                plan_operands=getattr(self.base, "plan_operands", None))
+            self._scans[monitored] = _shared_trace(
+                self._trace_key(("scan", monitored)),
+                lambda: make_superchunk_scan(
+                    self.base.process_fn, self.base.spec, monitored,
+                    self.monitor_laplace, mesh=self.mesh,
+                    plan_operands=getattr(self.base, "plan_operands", None)))
         return self._scans[monitored]
 
 
@@ -416,6 +449,11 @@ class FleetRunner:
         self._migration_until = np.full(k, _NEG_INF, np.float64)
         self._cur_rows: Optional[np.ndarray] = None
         self._old_rows: Optional[np.ndarray] = None
+        # Stream carry for run(..., resume=True): ring-buffer state (and,
+        # for the monitored subclass, monitor rings + deferred flags)
+        # persists across run calls so segmented replays are one
+        # continuous stream.
+        self._state = None
 
     # -- statistics --------------------------------------------------------
 
@@ -456,13 +494,22 @@ class FleetRunner:
 
     def _deploy(self, p: int, new_plan, t0: float, m: FleetMetrics) -> None:
         """Deploy with the [36] migration split: the old plan row keeps
-        serving matches born before ``t0``, the new row everything after."""
+        serving matches born before ``t0``, the new row everything after.
+
+        Deployment also retires any capacity escalation: the blown-up
+        match sets belonged to the plan era being replaced — the planner
+        just chose a plan to shrink them — so the fleet drops back to its
+        base match capacity.  If the new plan still overflows, the
+        per-chunk recovery loop re-escalates; a pinned-plan run never
+        deploys, so it keeps paying the escalated-shape join cost — that
+        asymmetry *is* the adaptivity win the replay harness gates on."""
         self.old_plans[p] = self.cur_plans[p]
         self._old_rows[p] = self._cur_rows[p]
         self.cur_plans[p] = new_plan
         self._cur_rows[p] = self._plan_row(new_plan)
         self._replan_t[p] = t0
         self._migration_until[p] = t0 + self.pattern.window
+        self._active_fleet = self.fleet
         m.deployments += 1
         m.per_partition_deployments[p] += 1
 
@@ -531,11 +578,21 @@ class FleetRunner:
 
     # -- main loop ---------------------------------------------------------
 
-    def run(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+    def run(self, fleet_stream: Iterable[FleetChunk],
+            resume: bool = False) -> FleetMetrics:
+        """Consume a fleet stream through the adaptive loop.
+
+        ``resume=True`` continues the previous ``run``'s stream instead of
+        starting a fresh one: ring buffers, estimator windows, deployed
+        plans and escalated capacities all carry over, so running a stream
+        in segments is equivalent to running it in one call (metrics are
+        still per-call).
+        """
         m = FleetMetrics(
             per_partition_matches=np.zeros(self.k, np.int64),
             per_partition_deployments=np.zeros(self.k, np.int64))
-        state = self.fleet.init_state()
+        state = (self._state if resume and self._state is not None
+                 else self.fleet.init_state())
         if self._cur_rows is None:
             probe = self._plan_row(
                 self.planner(self.pattern,
@@ -543,17 +600,25 @@ class FleetRunner:
             self._cur_rows = np.tile(probe, (self.k,) + (1,) * probe.ndim)
             self._old_rows = self._cur_rows.copy()
             self.cur_plans = [None] * self.k  # real plans set per partition
+        # A policy-free runner is a *pinned-plan* baseline: nothing
+        # consumes the statistics, so the per-chunk host Monte-Carlo
+        # selectivity sampling would be pure overhead charged to a run
+        # that cannot adapt — skip it once the cold plans are planted.
+        adaptive = any(pol is not None for pol in self.policies)
 
         for fc in fleet_stream:
             t_ctl = time.perf_counter()
-            self._observe(fc)
-            for p in range(self.k):
-                self._replan_partition(
-                    p, self.estimator.snapshot(p), fc.t0, m)
+            if adaptive or any(pl is None for pl in self.cur_plans):
+                if adaptive:
+                    self._observe(fc)
+                for p in range(self.k):
+                    self._replan_partition(
+                        p, self.estimator.snapshot(p), fc.t0, m)
             migrating = self._fold_lapsed(fc.t0)
             m.control_time_s += time.perf_counter() - t_ctl
 
             t_eng = time.perf_counter()
+            pre_fleet = self._active_fleet
             state, (full, pm, ov, cl, ng) = self._plain_passes(
                 state, fc, fc.chunk, migrating)
             # Overflow recovery: a truncated join may have dropped
@@ -573,6 +638,10 @@ class FleetRunner:
                     state, fc, empty, migrating)
                 pm = pm + pm_so_far
             if migrating.any():
+                # A mid-migration overflow is the retiring plan's: recount
+                # at escalated capacity, but don't let the old era's shape
+                # outlive its migration window.
+                self._active_fleet = pre_fleet
                 m.migration_partition_chunks += int(migrating.sum())
             m.engine_time_s += time.perf_counter() - t_eng
 
@@ -584,6 +653,7 @@ class FleetRunner:
             m.closure_expansions += int(cl.sum())
             m.neg_rejected += int(ng.sum())
             m.per_partition_matches += full
+        self._state = state
         return m
 
 
@@ -695,6 +765,14 @@ class MonitoredFleetRunner(FleetRunner):
         self.monitor_buckets = estimator_buckets
         self._caps = (max_inv, max_terms)
         self._low: Optional[StackedLowered] = None
+        # resume carry (alongside FleetRunner._state): monitor rings and
+        # the deferred flag from the previous run's final chunk — which a
+        # single-call run can never apply, but a resumed continuation
+        # must, to stay equivalent to one continuous stream.
+        self._monitor = None
+        self._pending: Optional[np.ndarray] = None
+        self._pend_rates = None
+        self._pend_sel = None
 
     # -- invariant deployment ---------------------------------------------
 
@@ -730,18 +808,32 @@ class MonitoredFleetRunner(FleetRunner):
             if new_plan != self.cur_plans[p]:
                 self._deploy(p, new_plan, t0, m)
 
-    def run(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+    def _carry(self, resume: bool):
+        """Stream carry shared by both monitored loops: either the
+        previous run's (state, monitor, pending flags + statistic slices)
+        or a fresh stream."""
+        if resume and self._state is not None:
+            return (self._state, self._monitor, self._pending,
+                    self._pend_rates, self._pend_sel)
+        return (self.fleet.init_state(),
+                self.fleet.init_monitor(self.monitor_buckets),
+                np.zeros(self.k, bool), None, None)
+
+    def _save_carry(self, state, monitor, pending, rates, sel) -> None:
+        self._state, self._monitor = state, monitor
+        self._pending = pending
+        self._pend_rates, self._pend_sel = rates, sel
+
+    def run(self, fleet_stream: Iterable[FleetChunk],
+            resume: bool = False) -> FleetMetrics:
         if self.superchunk > 1:
-            return self._run_scanned(fleet_stream)
+            return self._run_scanned(fleet_stream, resume)
         m = FleetMetrics(
             per_partition_matches=np.zeros(self.k, np.int64),
             per_partition_deployments=np.zeros(self.k, np.int64))
-        state = self.fleet.init_state()
-        monitor = self.fleet.init_monitor(self.monitor_buckets)
+        state, monitor, pending, rates_dev, sel_dev = self._carry(resume)
         if self._low is None:
             self._prime()
-        pending = np.zeros(self.k, bool)
-        rates_dev = sel_dev = None
 
         for fc in fleet_stream:
             t_ctl = time.perf_counter()
@@ -765,6 +857,7 @@ class MonitoredFleetRunner(FleetRunner):
             # Overflow-escalation recounts run the *plain* passes so the
             # statistics ring is updated exactly once per chunk (by the
             # monitored pass above) and flags are never double-observed.
+            pre_fleet = self._active_fleet
             tries = 0
             while (ov.sum() > 0 and self.escalate_on_overflow
                    and tries < self.max_escalations):
@@ -778,6 +871,8 @@ class MonitoredFleetRunner(FleetRunner):
                     state, fc, empty, migrating)
                 pm = pm + pm_so_far
             if migrating.any():
+                # Mid-migration overflow: transient recount, not a regime.
+                self._active_fleet = pre_fleet
                 m.migration_partition_chunks += int(migrating.sum())
 
             # The entire per-chunk host round-trip: one (K,) bool vector.
@@ -793,11 +888,13 @@ class MonitoredFleetRunner(FleetRunner):
             m.closure_expansions += int(cl.sum())
             m.neg_rejected += int(ng.sum())
             m.per_partition_matches += full
+        self._save_carry(state, monitor, pending, rates_dev, sel_dev)
         return m
 
     # -- superchunk (scanned) loop -----------------------------------------
 
-    def _run_scanned(self, fleet_stream: Iterable[FleetChunk]) -> FleetMetrics:
+    def _run_scanned(self, fleet_stream: Iterable[FleetChunk],
+                     resume: bool = False) -> FleetMetrics:
         """The per-chunk loop above with the host taken out of it.
 
         ``lax.scan`` rolls up to ``superchunk`` chunks per dispatch; flags,
@@ -813,12 +910,9 @@ class MonitoredFleetRunner(FleetRunner):
         m = FleetMetrics(
             per_partition_matches=np.zeros(self.k, np.int64),
             per_partition_deployments=np.zeros(self.k, np.int64))
-        state = self.fleet.init_state()
-        monitor = self.fleet.init_monitor(self.monitor_buckets)
+        state, monitor, pending, pend_rates, pend_sel = self._carry(resume)
         if self._low is None:
             self._prime()
-        pending = np.zeros(self.k, bool)
-        pend_rates = pend_sel = None
         it = iter(fleet_stream)
         buf: List[FleetChunk] = []
         exhausted = False
@@ -887,6 +981,7 @@ class MonitoredFleetRunner(FleetRunner):
                         for c in (full_h, pm_h, ov_h, cl_h, ng_h)]
             full_l, pm_l, ov_l, cl_l, ng_l = (c[last].copy()
                                               for c in counters)
+            pre_fleet = self._active_fleet
             if (self.escalate_on_overflow and ov_l.sum() > 0):
                 # Overflow recovery for the event chunk, identical to the
                 # per-chunk loop: re-evaluate at the next pow2 match
@@ -906,6 +1001,10 @@ class MonitoredFleetRunner(FleetRunner):
                         self._plain_passes(state, buf[last], empty,
                                            migrating_l)
                     pm_l = pm_l + pm_so_far
+            if ctl.migrating[last].any():
+                # Mid-migration overflow: transient recount, not a regime
+                # (mirrors the per-chunk loop chunk-for-chunk).
+                self._active_fleet = pre_fleet
 
             for s in range(accept):
                 m.chunks += 1
@@ -929,4 +1028,5 @@ class MonitoredFleetRunner(FleetRunner):
             pend_sel = ys.sel[last]
             m.engine_time_s += time.perf_counter() - t_eng
             buf = buf[accept:]
+        self._save_carry(state, monitor, pending, pend_rates, pend_sel)
         return m

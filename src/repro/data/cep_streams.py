@@ -62,33 +62,52 @@ class ChunkRecord:
         return int(self.counts.sum())
 
 
-def _emit(rng, cfg: StreamConfig, rates, attr_mean, t0) -> ChunkRecord:
-    t1 = t0 + cfg.chunk_duration
-    counts = rng.poisson(rates * cfg.chunk_duration)
+def emit_chunk(rng, rates, attr_mean, t0, *, chunk_duration: float = 1.0,
+               chunk_cap: int = 512, n_attrs: int = 1,
+               attr_sigma: float = 1.0) -> ChunkRecord:
+    """Emit one padded chunk of Poisson arrivals at the given true rates.
+
+    The shared emission kernel behind every generator in this module and
+    the scenario adapters (``data.scenarios``): per-type Poisson counts
+    over ``chunk_duration``, uniform timestamps within the slice, types
+    interleaved over time, attributes Gaussian around ``attr_mean`` —
+    fully deterministic given ``rng``.  ``rates`` has shape ``(n_types,)``
+    and ``attr_mean`` ``(n_types, n_attrs)``; the true rates ride along in
+    the record as the ground-truth drift trajectory.
+    """
+    t1 = t0 + chunk_duration
+    n_types = len(rates)
+    counts = rng.poisson(np.asarray(rates, np.float64) * chunk_duration)
     total = int(counts.sum())
-    cap = cfg.chunk_cap
+    cap = chunk_cap
     if total > cap:  # clip proportionally, keeping determinism
         scale = cap / total
         counts = np.floor(counts * scale).astype(counts.dtype)
         total = int(counts.sum())
-    type_id = np.repeat(np.arange(cfg.n_types, dtype=np.int32), counts)
+    type_id = np.repeat(np.arange(n_types, dtype=np.int32), counts)
     ts = np.sort(rng.uniform(t0, t1, total)).astype(np.float32)
     order = rng.permutation(total)  # interleave types over time
     type_id = type_id[order]
-    attrs = (attr_mean[type_id]
-             + rng.normal(0, 1.0, (total, cfg.n_attrs))).astype(np.float32)
+    attrs = (np.asarray(attr_mean, np.float64)[type_id]
+             + rng.normal(0, attr_sigma, (total, n_attrs))).astype(np.float32)
     # pad to capacity
     pad = cap - total
     type_id = np.concatenate([type_id, np.full(pad, -1, np.int32)])
     ts = np.concatenate([ts, np.zeros(pad, np.float32)])
-    attrs = np.concatenate([attrs, np.zeros((pad, cfg.n_attrs), np.float32)])
+    attrs = np.concatenate([attrs, np.zeros((pad, n_attrs), np.float32)])
     valid = np.concatenate([np.ones(total, bool), np.zeros(pad, bool)])
     return ChunkRecord(
         chunk=Chunk(type_id, ts, attrs, valid),
         t0=float(t0), t1=float(t1),
         counts=counts.astype(np.float64),
-        true_rates=rates.copy(),
+        true_rates=np.asarray(rates, np.float64).copy(),
     )
+
+
+def _emit(rng, cfg: StreamConfig, rates, attr_mean, t0) -> ChunkRecord:
+    return emit_chunk(rng, rates, attr_mean, t0,
+                      chunk_duration=cfg.chunk_duration,
+                      chunk_cap=cfg.chunk_cap, n_attrs=cfg.n_attrs)
 
 
 def traffic_stream(cfg: StreamConfig) -> Iterator[ChunkRecord]:

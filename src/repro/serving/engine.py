@@ -150,7 +150,13 @@ class CEPFleetServingEngine:
         """Cheap deployment (§2.2): rewrite one stacked plan row."""
         self._rows[partition] = self.fleet.plan_row(plan)
 
-    def _route(self, type_id, ts, attr, keys):
+    def route(self, type_id, ts, attr, keys):
+        """Route one keyed event batch to a stacked per-partition chunk.
+
+        Capacity-clipped events accumulate in ``dropped`` — the only
+        engine-side drop channel; the router's ``late_dropped`` is the
+        only other one, so ``submitted == reached-engine + late_dropped +
+        dropped + pending`` is checkable end to end."""
         chunk, dropped = route_events(
             np.asarray(type_id), np.asarray(ts), np.asarray(attr),
             np.asarray(keys), self.k, self.chunk_cap)
@@ -185,7 +191,7 @@ class CEPFleetServingEngine:
 
         Returns the per-partition full-match counts for this slice.
         """
-        return self.process_chunk(self._route(type_id, ts, attr, keys),
+        return self.process_chunk(self.route(type_id, ts, attr, keys),
                                   t0, t1)
 
     # -- superchunk control plane ------------------------------------------

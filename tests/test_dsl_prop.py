@@ -1,0 +1,117 @@
+"""Property tests: random ``P`` DSL trees vs the brute-force oracle.
+
+Seed-driven generation (``tests/_prop.py``: hypothesis when installed, a
+deterministic sweep otherwise) over the full representable tree space —
+``seq``/``and_``/``or_`` with optional negation, Kleene closure, chained
+attribute predicates and per-tree windows, depth <= 3 (an ``or_`` of
+decorated sequence/conjunction branches).  Whatever the tree, a Session's
+match count on a short random stream must equal the per-branch oracle sum.
+"""
+
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro import cep
+from repro.cep import P, RuntimeConfig
+from repro.core.ref_engine import RefEngine
+from repro.data.cep_streams import emit_chunk
+
+N_TYPES = 4
+
+
+def random_branch(rng):
+    """One non-composite builder: a decorated seq or and_ pattern."""
+    n = int(rng.integers(2, 4))
+    type_ids = list(rng.choice(N_TYPES, n, replace=False))
+    kind = rng.random()
+    window = float(rng.uniform(3.0, 8.0))
+    if kind < 0.35:                       # plain AND conjunction
+        b = P.and_(*type_ids)
+    else:                                 # sequence, maybe neg/kleene
+        elements = [int(t) for t in type_ids]
+        deco = rng.random()
+        if deco < 0.3 and n >= 2:
+            spare = [t for t in range(N_TYPES) if t not in type_ids]
+            if spare:
+                pos = int(rng.integers(0, n + 1))
+                elements.insert(pos, P.neg(int(spare[0])))
+        elif deco < 0.6:
+            pos = int(rng.integers(0, n))
+            elements[pos] = P.kleene(elements[pos],
+                                     bound=int(rng.integers(2, 4)))
+        b = P.seq(*elements)
+    # chained pairwise predicates between adjacent positive positions
+    conds = []
+    for p in range(n - 1):
+        if rng.random() < 0.7:
+            theta = float(rng.uniform(-0.5, 0.8))
+            a, c = P.attr(p), P.attr(p + 1)
+            conds.append(a < c + theta if rng.random() < 0.5
+                         else a > c - theta)
+    if conds:
+        b = b.where(*conds)
+    return b.within(window)
+
+
+def random_tree(rng):
+    """A random DSL tree of depth <= 3; returns (builder, branch builders)."""
+    if rng.random() < 0.35:
+        branches = [random_branch(rng) for _ in range(int(rng.integers(2, 4)))]
+        return P.or_(*branches), branches
+    b = random_branch(rng)
+    return b, [b]
+
+
+def random_records(rng, n_chunks=3):
+    recs = []
+    for c in range(n_chunks):
+        rates = rng.uniform(1.0, 6.0, N_TYPES)
+        attr_mean = rng.normal(0.0, 0.5, (N_TYPES, 1))
+        recs.append(emit_chunk(rng, rates, attr_mean, float(c),
+                               chunk_duration=1.0, chunk_cap=128))
+    return recs
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000))
+def test_random_tree_session_equals_oracle(seed):
+    rng = np.random.default_rng(seed)
+    tree, branches = random_tree(rng)
+    recs = random_records(rng)
+    s = cep.open(tree, partitions=1,
+                 config=RuntimeConfig(buffer_capacity=64,
+                                      match_capacity=512))
+    tel = s.run(recs)
+    ref = sum(RefEngine(b.build()).run(recs).full_matches for b in branches)
+    assert tel.matches == ref, (
+        f"seed={seed}: session {tel.matches} != oracle {ref} for "
+        + " | ".join(str(b.build()) for b in branches))
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000))
+def test_random_tree_fleet_equals_per_partition_oracle(seed):
+    """Same property through the vmapped fleet plane (K=3): the stacked
+    session must equal the sum of independent per-partition oracles."""
+    rng = np.random.default_rng(seed + 77)
+    tree, branches = random_tree(rng)
+    streams = [random_records(rng) for _ in range(3)]
+    s = cep.open(tree, partitions=3,
+                 config=RuntimeConfig(buffer_capacity=64,
+                                      match_capacity=512))
+    tel = s.run(streams)
+    ref = sum(RefEngine(b.build()).run(recs).full_matches
+              for b in branches for recs in streams)
+    assert tel.matches == ref
+
+
+def test_dsl_validation_rejects_malformed_trees():
+    with pytest.raises(ValueError):
+        P.seq(0).within(5.0).build()                 # < 2 primitives
+    with pytest.raises(ValueError):
+        P.seq(0, 0, 1).within(5.0).build()           # duplicate type ids
+    with pytest.raises(ValueError):
+        P.seq(0, P.neg(2), P.kleene(1)).within(5.0).build()  # neg + kleene
+    with pytest.raises(TypeError):
+        bool(P.attr(0) < P.attr(1))                  # Cond is not a bool

@@ -1,0 +1,132 @@
+"""Scenario-suite differential grid: Session vs the brute-force oracle.
+
+Every bundled scenario's stream prefix runs through ``cep.open`` across the
+(K, superchunk) grid and must report exactly the oracle's match count —
+monitored adaptivity, superchunk scans, and partition stacking change cost,
+never semantics.  Heavy grid points carry ``@pytest.mark.slow``.
+"""
+
+import numpy as np
+import pytest
+
+from repro import cep
+from repro.cep import RuntimeConfig
+from repro.core.ref_engine import RefEngine
+from repro.data import scenarios
+
+CHUNKS = 12          # prefix length fed to the oracle (warmup + control)
+GRID = [
+    pytest.param(1, 1, id="k1-s1"),
+    pytest.param(4, 1, id="k4-s1", marks=pytest.mark.slow),
+    pytest.param(1, 8, id="k1-s8", marks=pytest.mark.slow),
+    pytest.param(4, 8, id="k4-s8", marks=pytest.mark.slow),
+]
+
+
+def _config(sc, *, superchunk=1):
+    return RuntimeConfig(**sc.runtime, escalate_on_overflow=True,
+                         superchunk=superchunk)
+
+
+def _oracle_matches(sc, k, *, seed=0, chunks=CHUNKS):
+    total = 0
+    for p in range(k):
+        total += RefEngine(sc.pattern.build()).run(
+            sc.stream(p, seed=seed, chunks=chunks)).full_matches
+    return total
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+@pytest.mark.parametrize("k,superchunk", GRID)
+def test_scenario_prefix_matches_oracle(name, k, superchunk):
+    sc = scenarios.get(name)
+    n = CHUNKS if superchunk == 1 else 16   # superchunk needs n % s == 0
+    s = cep.open(sc.pattern, partitions=k, monitor=True,
+                 superchunk=superchunk,
+                 config=_config(sc, superchunk=superchunk))
+    tel = s.run(sc.streams(k, seed=0, chunks=n))
+    assert tel.matches == _oracle_matches(sc, k, chunks=n)
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+def test_scenario_stream_deterministic(name):
+    sc = scenarios.get(name)
+    a = list(sc.stream(0, seed=3, chunks=4))
+    b = list(sc.stream(0, seed=3, chunks=4))
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(ra.chunk.ts),
+                                      np.asarray(rb.chunk.ts))
+        np.testing.assert_array_equal(ra.counts, rb.counts)
+    # distinct partitions / seeds draw distinct event noise
+    c = list(sc.stream(1, seed=3, chunks=4))
+    assert any(ra.n_events != rc.n_events or
+               not np.array_equal(np.asarray(ra.chunk.ts),
+                                  np.asarray(rc.chunk.ts))
+               for ra, rc in zip(a, c))
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+def test_scenario_trajectory_structure(name):
+    """Ground-truth drift structure: control is stationary, drift is not,
+    and the emitted streams' true rates mirror the trajectory exactly."""
+    sc = scenarios.get(name)
+    rates = sc.drift_trajectory(0, seed=0)
+    assert rates.shape == (sc.n_chunks, sc.n_types)
+    for seg, lo, hi in sc.segment_slices():
+        if seg.gate == "control":
+            assert np.allclose(rates[lo:hi], rates[lo]), (
+                f"{name}:{seg.name} control segment must be stationary")
+        if seg.gate == "drift":
+            assert not np.allclose(rates[lo:hi], rates[lo - 1]), (
+                f"{name}:{seg.name} drift segment must leave the control "
+                f"regime")
+    recs = list(sc.stream(0, seed=0, chunks=6))
+    want = sc.drift_trajectory(0, seed=0, chunks=6)
+    got = np.stack([r.true_rates for r in recs])
+    np.testing.assert_allclose(got, want * sc.rate_scale)
+
+
+@pytest.mark.parametrize("name", scenarios.names())
+def test_scenario_resume_equals_continuous(name):
+    """Segment-by-segment replay with ``resume=True`` is the same run as
+    one continuous stream — the replay harness's measurement boundaries
+    must not be semantic boundaries."""
+    sc = scenarios.get(name)
+    k = sc.partitions
+    full = cep.open(sc.pattern, partitions=k, monitor=True,
+                    config=_config(sc))
+    t_full = full.run(sc.streams(k, seed=0, chunks=16))
+
+    seg = cep.open(sc.pattern, partitions=k, monitor=True,
+                   config=_config(sc))
+    tels = []
+    for lo, hi in ((0, 6), (6, 11), (11, 16)):
+        parts = [list(sc.stream(p, seed=0, chunks=16))[lo:hi]
+                 for p in range(k)]
+        tels.append(seg.run(parts, resume=bool(tels)))
+    assert sum(t.matches for t in tels) == t_full.matches
+    assert sum(t.replans for t in tels) == t_full.replans
+    assert sum(t.escalations for t in tels) == t_full.escalations
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", scenarios.names())
+def test_scenario_drift_prefix_matches_oracle(name):
+    """Differential check reaching into the drift segment (plan changes,
+    migrations and escalations active) at native K."""
+    sc = scenarios.get(name)
+    warm = sum(s.n_chunks for s in sc.segments[:2])
+    n = warm + 8
+    k = sc.partitions
+    s = cep.open(sc.pattern, partitions=k, monitor=True, config=_config(sc))
+    tel = s.run(sc.streams(k, seed=0, chunks=n))
+    assert tel.matches == _oracle_matches(sc, k, chunks=n)
+
+
+def test_scenario_registry():
+    assert set(scenarios.names()) == {"citibike", "flowsense", "fraud"}
+    sc = scenarios.get("citibike")
+    assert sc.n_chunks == sum(s.n_chunks for s in sc.segments)
+    assert [s.gate for s in sc.segments] == ["none", "control", "drift"]
+    with pytest.raises(ValueError):
+        scenarios.get("nope")

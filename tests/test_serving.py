@@ -84,3 +84,106 @@ def test_ssm_serving_exact_buckets(rng):
     tok = eng.prefill_one(
         rng.integers(0, cfg.vocab, 16).astype(np.int32), 0)
     assert 0 <= tok < cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# CEP stream router: drop accounting across superchunk boundaries
+# ---------------------------------------------------------------------------
+
+
+def _router_pair(superchunk, chunk_cap=64, m_cap=512):
+    from repro.core.engine import EngineConfig
+    from repro.core.patterns import chain_predicates, seq_pattern
+    from repro.core.plans import OrderPlan
+    from repro.serving import CEPFleetServingEngine, CEPStreamRouter
+
+    pat = seq_pattern([0, 1, 2], 3.0,
+                      chain_predicates([0, 1, 2], theta=0.6))
+    def make():
+        eng = CEPFleetServingEngine(
+            pat, 2, OrderPlan((0, 1, 2)),
+            EngineConfig(b_cap=64, m_cap=m_cap),
+            chunk_cap=chunk_cap, superchunk=superchunk)
+        return CEPStreamRouter(eng, slice_duration=0.5)
+    return make(), make()
+
+
+def _submit_workload(routers, rng, n=180, t_hi=4.25):
+    """Random keyed events, including late (ts <= 0), slice-edge-exact and
+    far-future timestamps, submitted identically to every router."""
+    ts = rng.uniform(-0.5, t_hi, n).astype(np.float32)
+    ts[:4] = [0.0, 0.5, 1.0, 2.5]      # exactly on slice edges
+    tid = rng.integers(0, 3, n).astype(np.int32)
+    keys = rng.integers(0, 7, n)
+    attr = rng.normal(size=(n, 1)).astype(np.float32)
+    for i in range(n):
+        for r in routers:
+            r.submit(keys[i], tid[i], ts[i], attr[i])
+    return n
+
+
+def test_router_superchunk_ticks_equal_sequential(rng):
+    """``tick_superchunk(n)`` must be accounting-identical to n ticks:
+    same matches, same late drops, same capacity drops, same queue."""
+    seq, sup = _router_pair(superchunk=4)
+    submitted = _submit_workload((seq, sup), rng)
+
+    full_seq = np.stack([seq.tick() for _ in range(4)])
+    full_sup = sup.tick_superchunk(4)
+    np.testing.assert_array_equal(full_seq, full_sup)
+
+    # a second round crosses the superchunk boundary with carried state
+    submitted += _submit_workload((seq, sup), rng, n=60, t_hi=4.5)
+    full_seq = np.stack([seq.tick() for _ in range(4)])
+    full_sup = sup.tick_superchunk(4)
+    np.testing.assert_array_equal(full_seq, full_sup)
+
+    assert seq.late_dropped == sup.late_dropped > 0
+    assert seq.routed == sup.routed
+    assert seq.pending == sup.pending
+    assert seq.engine.dropped == sup.engine.dropped
+    np.testing.assert_array_equal(seq.engine.matches, sup.engine.matches)
+    assert seq.slices == sup.slices == 8
+
+
+def test_router_drop_conservation(rng):
+    """Every submitted event is accounted for exactly once:
+    submitted == routed + late_dropped + pending, and the engine sees
+    routed - engine.dropped of them (capacity clipping)."""
+    for superchunk, chunk_cap in ((1, 8), (4, 8)):
+        router, _ = _router_pair(superchunk=superchunk,
+                                 chunk_cap=chunk_cap)
+        submitted = _submit_workload((router,), rng, n=150)
+        if superchunk == 1:
+            for _ in range(4):
+                router.tick()
+        else:
+            router.tick_superchunk(4)
+        assert submitted == (router.routed + router.late_dropped
+                             + router.pending)
+        assert router.engine.dropped > 0     # tiny cap must clip
+        assert router.routed - router.engine.dropped >= 0
+
+
+def test_router_superchunk_monitored_engine(rng):
+    """The monitored serving engine behind ``tick_superchunk`` must agree
+    with the per-tick monitored router on matches and drop accounting."""
+    from repro.core.engine import EngineConfig
+    from repro.core.patterns import chain_predicates, seq_pattern
+    from repro.serving import CEPStreamRouter, MonitoredCEPFleetServingEngine
+
+    pat = seq_pattern([0, 1, 2], 3.0,
+                      chain_predicates([0, 1, 2], theta=0.6))
+    def make(superchunk):
+        eng = MonitoredCEPFleetServingEngine(
+            pat, 2, EngineConfig(b_cap=64, m_cap=512),
+            chunk_cap=64, superchunk=superchunk, monitor_buckets=8)
+        return CEPStreamRouter(eng, slice_duration=0.5)
+    seq, sup = make(1), make(2)
+    _submit_workload((seq, sup), rng)
+    full_seq = np.stack([seq.tick() for _ in range(4)])
+    full_sup = sup.tick_superchunk(4)
+    np.testing.assert_array_equal(full_seq, full_sup)
+    assert seq.late_dropped == sup.late_dropped
+    assert seq.routed == sup.routed
+    np.testing.assert_array_equal(seq.engine.matches, sup.engine.matches)
