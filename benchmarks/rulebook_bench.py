@@ -1,0 +1,254 @@
+"""Rulebook bench: one compiled data plane vs Q independent Sessions.
+
+Three self-gates, all load-bearing for the multi-pattern story:
+
+  1. Throughput — at Q=32 the rulebook must clear >= 2x the wall-clock
+     throughput of stepping Q monitored Sessions over the same chunks.
+     The win is structural: one dispatch per bucket instead of Q.
+  2. Equivalence — per-rule match counts must be *bit-identical* to the
+     Q independent Sessions.  This only holds with zero overflow (match
+     truncation makes counts plan-dependent), so both sides assert
+     overflow == 0; a capacity bump, not a tolerance, is the fix if
+     this ever fires.
+  3. Hot-add — adding a rule into a spare slot must not retrace any
+     bucket plane (trace-count probe across the add *and* the next
+     dispatch) and must land far under a cold rulebook compile.
+
+Emits BENCH_rulebook.json for CI upload + `run.py --summary`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+HEADER = "q,k,config,seconds,events,events_per_s,speedup"
+
+_A = 2          # attribute width shared by every generated rule
+_N_TYPES = 5
+_CAP = 32       # event slots per chunk per partition
+
+
+def make_rules(q: int):
+    """Deterministic mixed rulebook: shared-prefix SEQ families, AND
+    triples, bare pairs, plus NEG and Kleene representatives.
+
+    The first 12 rules form four 3-member families sharing a first
+    join (same leading pair + predicate), so prefix sharing is
+    measurable at every Q >= 2.
+    """
+    from repro.cep.dsl import P
+
+    rng = np.random.default_rng(11)
+    rules = []
+    for p0, p1 in ((0, 1), (2, 3), (1, 4), (3, 0)):
+        th = round(float(rng.uniform(0.2, 0.6)), 3)
+        for x in range(_N_TYPES):
+            if x in (p0, p1):
+                continue
+            rules.append(P.seq(p0, p1, x)
+                         .where(P.attr(0, 0) < P.attr(1, 0) + th)
+                         .within(2.0).attrs(_A))
+    rules.append(P.seq(0, P.neg(3), 1, 2)
+                 .where(P.attr(0, 0) < P.attr(1, 0) + 0.3)
+                 .within(3.0).attrs(_A))
+    rules.append(P.seq(2, P.neg(0), 4, 1)
+                 .where(P.attr(0, 1) < P.attr(1, 0) + 0.2)
+                 .within(3.0).attrs(_A))
+    rules.append(P.seq(3, P.kleene(4, 2), 1).within(2.5).attrs(_A))
+    rules.append(P.seq(1, P.kleene(0, 2), 2).within(2.5).attrs(_A))
+    while len(rules) < q:
+        kind = len(rules) % 3
+        types = rng.choice(_N_TYPES, size=3, replace=False).tolist()
+        th = round(float(rng.uniform(-0.2, 0.5)), 3)
+        if kind == 0:
+            rules.append(P.seq(*types)
+                         .where(P.attr(0, 0) < P.attr(1, 1) + th)
+                         .within(2.0).attrs(_A))
+        elif kind == 1:
+            rules.append(P.and_(*types)
+                         .where(P.attr(0, 1) > P.attr(2, 0) - th)
+                         .within(1.5).attrs(_A))
+        else:
+            rules.append(P.seq(types[0], types[1])
+                         .within(1.5).attrs(_A))
+    return rules[:q]
+
+
+def make_chunks(n_chunks: int, k: int, seed: int = 7):
+    """Pre-generated stacked (K-axis) chunks, identical for both sides."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import Chunk
+
+    rng = np.random.default_rng(seed)
+    out, events = [], 0
+
+    def one(t0, t1):
+        nonlocal events
+        n = int(rng.integers(4, 10))
+        events += n
+        tid = rng.integers(0, _N_TYPES, size=n).astype(np.int32)
+        ts = np.sort(rng.uniform(t0, t1, size=n)).astype(np.float32)
+        attr = rng.normal(size=(n, _A)).astype(np.float32)
+        pad = _CAP - n
+        return Chunk(
+            type_id=jnp.asarray(np.pad(tid, (0, pad), constant_values=-1)),
+            ts=jnp.asarray(np.pad(ts, (0, pad))),
+            attr=jnp.asarray(np.pad(attr, ((0, pad), (0, 0)))),
+            valid=jnp.asarray(np.arange(_CAP) < n))
+
+    for step in range(n_chunks):
+        t0, t1 = float(step), float(step + 1)
+        parts = [one(t0, t1) for _ in range(k)]
+        out.append((jax.tree.map(lambda *xs: jnp.stack(xs), *parts),
+                    t0, t1))
+    return out, events
+
+
+def bench_q(q: int, k: int, n_chunks: int):
+    import repro.cep as cep
+    from repro.cep.config import RuntimeConfig
+    from repro.cep.rulebook import open_rulebook
+
+    # match_capacity is sized so overflow stays 0 — the equivalence
+    # gate is only meaningful without truncation.
+    cfg = RuntimeConfig(buffer_capacity=32, match_capacity=128,
+                        estimator_buckets=8)
+    rules = make_rules(q)
+    chunks, events = make_chunks(n_chunks, k)
+
+    t = time.time()
+    rb = open_rulebook(rules, partitions=k, monitor=True, config=cfg,
+                       spare_slots=1)
+    rb.step(*chunks[0])
+    cold_s = time.time() - t
+
+    sessions = [cep.open(r, partitions=k, monitor=True, config=cfg)
+                for r in rules]
+    sess_counts = np.zeros((q, k), np.int64)
+    for i, s in enumerate(sessions):
+        sess_counts[i] += np.asarray(s.step(*chunks[0]))
+
+    # timed region: identical chunk stream through both fronts
+    t = time.time()
+    for chunk, t0, t1 in chunks[1:]:
+        rb.step(chunk, t0, t1)
+    rb_s = time.time() - t
+
+    t = time.time()
+    for chunk, t0, t1 in chunks[1:]:
+        for i, s in enumerate(sessions):
+            sess_counts[i] += np.asarray(s.step(chunk, t0, t1))
+    loop_s = time.time() - t
+
+    tel = rb.telemetry()
+    assert tel.overflow == 0, (
+        f"rulebook overflow {tel.overflow} — counts are plan-dependent "
+        "under truncation; raise match_capacity")
+    for s in sessions:
+        assert s.telemetry().overflow == 0, "session side overflowed"
+    assert np.array_equal(rb.match_counts, sess_counts), (
+        "per-rule counts diverge from Q independent Sessions:\n"
+        f"{rb.match_counts}\nvs\n{sess_counts}")
+
+    ev = events * 1  # per-partition streams are independent draws
+    speedup = loop_s / max(rb_s, 1e-9)
+    rows = [
+        {"q": q, "k": k, "config": "rulebook", "seconds": round(rb_s, 4),
+         "events": ev, "events_per_s": round(ev / max(rb_s, 1e-9), 1)},
+        {"q": q, "k": k, "config": "session_loop",
+         "seconds": round(loop_s, 4),
+         "events": ev, "events_per_s": round(ev / max(loop_s, 1e-9), 1)},
+    ]
+    print(f"{q},{k},rulebook,{rb_s:.3f},{ev},{ev / max(rb_s, 1e-9):.1f},"
+          f"{speedup:.2f}", flush=True)
+    print(f"{q},{k},session_loop,{loop_s:.3f},{ev},"
+          f"{ev / max(loop_s, 1e-9):.1f},1.00", flush=True)
+    return rb, chunks, rows, {
+        "q": q, "k": k, "events": ev, "rulebook_s": round(rb_s, 4),
+        "session_loop_s": round(loop_s, 4), "speedup": round(speedup, 3),
+        "cold_compile_s": round(cold_s, 4),
+        "sharing_ratio": round(rb.sharing_ratio(), 3),
+        "replans": tel.replans, "violations": tel.violations,
+    }
+
+
+def bench_hot_add(rb, chunks, cold_s: float):
+    """Hot-add gate: zero retraces across add + next dispatch, and the
+    wall time (including that dispatch) lands far under a cold compile."""
+    from repro.cep.dsl import P
+
+    new_rule = (P.seq(4, 2, 0)
+                .where(P.attr(0, 1) < P.attr(1, 0) + 0.5)
+                .within(1.5).attrs(_A))
+    pre = rb.trace_count()
+    chunk, t0, t1 = chunks[-1]
+    t = time.time()
+    rid = rb.add_rule(new_rule)
+    rb.step(chunk, t0 + 1.0, t1 + 1.0)
+    hot_s = time.time() - t
+    retraces = rb.trace_count() - pre
+    assert retraces == 0, (
+        f"hot-add retraced {retraces} plane(s) — spare-slot writes must "
+        "not change any traced shape")
+    assert hot_s < cold_s / 5.0, (
+        f"hot-add {hot_s:.3f}s is not << cold compile {cold_s:.3f}s")
+    assert rid in rb.rules
+    print(f"hot_add,{hot_s:.4f}s,cold_compile,{cold_s:.3f}s,"
+          f"retraces,{retraces}", flush=True)
+    return {"hot_add_s": round(hot_s, 4), "cold_compile_s": round(cold_s, 4),
+            "retraces": retraces}
+
+
+def main(argv=None, quick: bool = True) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="bounded scale (the default); explicit flag for CI")
+    ap.add_argument("--json", default="BENCH_rulebook.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args(argv)
+    if args.full:
+        quick = False
+    k = 4
+    qs = (8, 32)
+    n_chunks = 12 if quick else 30
+
+    all_rows, summaries = [], []
+    print(HEADER)
+    hot = None
+    for q in qs:
+        rb, chunks, rows, summary = bench_q(q, k, n_chunks)
+        all_rows.extend(rows)
+        summaries.append(summary)
+        if q == max(qs):
+            hot = bench_hot_add(rb, chunks, summary["cold_compile_s"])
+            # The headline gate: amortizing Q rules into per-bucket
+            # dispatches must at least double throughput at Q=32.
+            assert summary["speedup"] >= 2.0, (
+                f"rulebook speedup {summary['speedup']:.2f}x at q={q} "
+                "under the 2x bar")
+            assert summary["sharing_ratio"] > 1.0, (
+                "shared-prefix families failed to group")
+
+    if args.json:
+        payload = {
+            "schema": "rulebook_bench/v1",
+            "quick": quick,
+            "rows": all_rows,
+            "summaries": summaries,
+            "hot_add": hot,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

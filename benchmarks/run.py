@@ -8,9 +8,78 @@ minutes on a 1-core CPU container); pass --full for the complete grids.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+
+def summarize(root: str = ".") -> None:
+    """Aggregate every committed BENCH_*.json into one trajectory table.
+
+    Each benchmark harness emits its own schema; this prints the headline
+    rows of each so CI logs carry a single at-a-glance performance
+    trajectory across kernel, fleet, scenario, and rulebook layers.
+    """
+    files = sorted(f for f in os.listdir(root)
+                   if f.startswith("BENCH_") and f.endswith(".json"))
+    if not files:
+        print("no BENCH_*.json artifacts found")
+        return
+    print(f"{'artifact':<22} {'metric':<38} {'value':>12}")
+    print("-" * 74)
+
+    def row(art, metric, value):
+        print(f"{art:<22} {metric:<38} {value:>12}")
+
+    for fname in files:
+        with open(os.path.join(root, fname)) as fh:
+            d = json.load(fh)
+        schema = d.get("schema", "?")
+        art = fname[len("BENCH_"):-len(".json")]
+        if schema.startswith("kernel_bench"):
+            best = {}
+            for r in d.get("rows", []):
+                if "speedup_vs_baseline" in r:
+                    best[r["config"]] = max(
+                        best.get(r["config"], 0.0),
+                        r["speedup_vs_baseline"])
+            for cfg, s in sorted(best.items()):
+                row(art, f"{cfg} speedup vs baseline", f"{s:.2f}x")
+        elif schema.startswith("fleet_bench"):
+            by_k = {}
+            for r in d.get("rows", []):
+                by_k.setdefault(r["k"], {})[r["config"]] = r
+            for k, cfgs in sorted(by_k.items()):
+                base = cfgs.get("baseline")
+                vm = cfgs.get("vmapped")
+                if base and vm:
+                    row(art, f"k={k} vmapped speedup",
+                        f"{base['seconds'] / max(vm['seconds'], 1e-9):.2f}x")
+            sc = d.get("superchunk", {})
+            if sc:
+                row(art, f"k={sc.get('k')} superchunk speedup",
+                    f"{sc.get('speedup_scanned', 0):.2f}x")
+                row(art, f"k={sc.get('k')} sharded speedup",
+                    f"{sc.get('speedup_sharded', 0):.2f}x")
+        elif schema.startswith("scenarios"):
+            for name, s in sorted(d.get("scenarios", {}).items()):
+                row(art, f"{name} events", s.get("events", "?"))
+            row(art, "all gates pass", str(d.get("all_gates_pass")))
+        elif schema.startswith("rulebook_bench"):
+            for s in d.get("summaries", []):
+                row(art, f"q={s['q']} rulebook vs session loop",
+                    f"{s['speedup']:.2f}x")
+                row(art, f"q={s['q']} sharing ratio",
+                    f"{s['sharing_ratio']:.2f}")
+            hot = d.get("hot_add") or {}
+            if hot:
+                row(art, "hot-add latency / cold compile",
+                    f"{hot['hot_add_s']:.2f}s/{hot['cold_compile_s']:.1f}s")
+                row(art, "hot-add retraces", hot["retraces"])
+        else:
+            row(art, f"(unrecognized schema {schema})", "-")
 
 
 def main(argv=None) -> None:
@@ -23,13 +92,20 @@ def main(argv=None) -> None:
                            "with --full")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,table1,fig69,kernel,fleet,moe,"
-                         "roofline")
+                         "roofline,rulebook")
+    ap.add_argument("--summary", action="store_true",
+                    help="print one trajectory table aggregated from the "
+                         "committed BENCH_*.json artifacts and exit")
     args = ap.parse_args(argv)
+    if args.summary:
+        summarize()
+        return
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from . import (adaptive_moe, fig5_distance, fig69_methods,
-                   fleet_bench, kernel_bench, roofline, table1_davg)
+                   fleet_bench, kernel_bench, roofline, rulebook_bench,
+                   table1_davg)
 
     sections = [
         ("fig5", "Figure 5 — throughput vs invariant distance d",
@@ -42,6 +118,8 @@ def main(argv=None) -> None:
          lambda: kernel_bench.main([], quick=quick)),
         ("fleet", "fleet executor — vmapped vs per-partition loop",
          lambda: fleet_bench.main([], quick=quick)),
+        ("rulebook", "rulebook — Q patterns on one compiled data plane",
+         lambda: rulebook_bench.main([], quick=quick)),
         ("moe", "adaptive MoE expert placement",
          lambda: adaptive_moe.main([], quick=quick)),
         ("roofline", "roofline table from dry-run artifacts",

@@ -25,12 +25,15 @@ from ..core.plans import OrderPlan, TreePlan  # noqa: F401
 from ..core.ref_engine import RefEngine  # noqa: F401
 from .config import RuntimeConfig  # noqa: F401
 from .dsl import P  # noqa: F401
+from .rulebook import Rulebook, open_rulebook  # noqa: F401
 from .session import Session, Telemetry, open  # noqa: F401
 
 __all__ = [
     "P",
     "open",
+    "open_rulebook",
     "Session",
+    "Rulebook",
     "Telemetry",
     "RuntimeConfig",
     "Pattern",

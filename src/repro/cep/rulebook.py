@@ -1,0 +1,778 @@
+"""Rulebook: one compiled data plane serving Q heterogeneous patterns.
+
+``cep.open`` gives one pattern one data plane; production CEP serves a
+*rule set* — thousands of distinct patterns per tenant.  A :class:`Rulebook`
+compiles Q patterns (any mix the ``P`` DSL can build, minus OR-composites)
+into the stacked structural tensors of ``core.multipattern``: rules are
+bucketed by arity/shape, each bucket runs Qb rules × K partitions through
+ONE jitted dispatch per chunk, and everything a rule *is* lives in row
+``q`` of the bucket's tensors — so the paper's plans-as-data discipline now
+covers the rule set itself:
+
+* **hot add / remove are row writes.**  ``add_rule`` lowers the pattern
+  into a free slot (ops row + plan rows + invariant rows + zeroed state
+  rows) and ``remove_rule`` masks a slot out; neither recompiles anything.
+  The only sanctioned retrace is bucket-capacity growth (the same jitted
+  callable re-entered with a bigger Qb — asserted via the plane's
+  trace-count probe in the bench).
+* **adaptation is per (q, k) cell.**  Each cell owns an
+  ``InvariantPolicy``; the monitored plane returns a (K, Qb) violation
+  bitmap and the host replans exactly the flagged cells (host work ∝
+  violations, as in the single-pattern serving front), deploying the fresh
+  plan + lowered invariant set as two row writes.
+* **common sub-joins run once.**  Rules whose cold plans open on the same
+  two-position sub-join (same positions, event types, window,
+  sequence-ness and pairwise predicate) form a prefix group: the shared
+  prefix join executes once per group and fans out to members
+  (``sharing_ratio()`` reports rules / groups).  Grouped rules keep their
+  leading two plan steps pinned (``greedy_order_plan(pin=...)``) so later
+  replans never break the share; hot-added rules always start their own
+  singleton group, since joining one retroactively would constrain plans
+  chosen before the rule existed.
+
+Counter semantics are the serving front's: immediate deployment, no
+migration split, exactly-once chunked counting — and per-rule counters are
+bit-identical to Q independent Sessions over the same stream (the bench
+and property tests gate this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import Chunk, EngineConfig, make_spec
+from ..core.fleet import stack_chunks
+from ..core.greedy import greedy_order_plan
+from ..core.invariants import LoweredInvariants
+from ..core.multipattern import (BucketSpec, RuleOps, ShareOps,
+                                 init_rule_buffers, init_rule_monitor,
+                                 lower_rule, make_rulebook_plane, pad_rule,
+                                 stack_rule_ops)
+from ..core.patterns import CompositePattern, Pattern
+from ..core.stats import Stat, uniform_stat
+from ..distributed.sharding import resolve_cep_mesh
+from .config import RuntimeConfig
+from .dsl import as_pattern
+from .session import Stream, Telemetry, _normalize_stream
+
+__all__ = ["Rulebook", "open_rulebook"]
+
+
+def _prefix_key(pattern: Pattern, order: Sequence[int]):
+    """Identity of a rule's leading two-position sub-join.
+
+    Two rules with equal keys produce bit-identical partial-match sets
+    after plan step 1: the key pins the buffer contents (types), the
+    eviction horizon (window), every active constraint row of the first
+    packed join (window rows, sequence anchors via positions + is_seq,
+    and the single live predicate row (o0, o1)) and the positions the
+    values land in.  Inactive rows are PRED_NONE on both sides.
+    """
+    spec = make_spec(pattern)
+    o0, o1 = int(order[0]), int(order[1])
+    return (o0, o1, spec.type_ids[o0], spec.type_ids[o1],
+            float(spec.window), bool(spec.is_seq),
+            int(spec.op_t[o0, o1]), int(spec.a_attr_t[o0, o1]),
+            int(spec.b_attr_t[o0, o1]), float(spec.theta_t[o0, o1]))
+
+
+class _Lowered2D:
+    """(K, Qb) invariant matrix: host-writable rows, device-cached.
+
+    The fleet's ``StackedLowered`` with a rule axis next to the partition
+    axis — a deployment patches one (k, q) cell, capacity growth pads the
+    rule axis and invalidates the cache.
+    """
+
+    def __init__(self, host: LoweredInvariants):
+        self.host = host
+        self._dev: Optional[LoweredInvariants] = None
+
+    @classmethod
+    def build(cls, rows_kq: Sequence[Sequence[LoweredInvariants]]):
+        return cls(LoweredInvariants(
+            *(np.stack([np.stack([np.asarray(getattr(r, f)) for r in krow])
+                        for krow in rows_kq])
+              for f in LoweredInvariants._fields)))
+
+    def write(self, k: int, q: int, row: LoweredInvariants) -> None:
+        for f in LoweredInvariants._fields:
+            dst, src = getattr(self.host, f), np.asarray(getattr(row, f))
+            if dst[k, q].shape != src.shape:
+                raise ValueError(
+                    f"lowered field {f!r}: row shape {src.shape} != "
+                    f"stacked {dst[k, q].shape}")
+            dst[k, q] = src
+        # Invalidate instead of patching: any number of cell deployments
+        # within one tick amortize into a single upload per field at the
+        # next dispatch.
+        self._dev = None
+
+    def grow(self, new_qcap: int) -> None:
+        q_cap = self.host.active.shape[1]
+        pad = new_qcap - q_cap
+        self.host = LoweredInvariants(*(
+            np.pad(getattr(self.host, f),
+                   ((0, 0), (0, pad)) + ((0, 0),) * (getattr(
+                       self.host, f).ndim - 2))
+            for f in LoweredInvariants._fields))
+        self._dev = None
+
+    def device(self) -> LoweredInvariants:
+        if self._dev is None:
+            self._dev = LoweredInvariants(
+                *(jnp.asarray(x) for x in self.host))
+        return self._dev
+
+
+@dataclasses.dataclass
+class _RuleEntry:
+    """Host bookkeeping + cumulative counters for one rule."""
+
+    rid: int
+    pattern: Pattern
+    bucket: "_Bucket"
+    slot: int               # q row in the bucket (fixed while active)
+    group: int              # u slot of its prefix group
+    pinned: Tuple[int, ...]  # () or the pinned 2-step prefix
+    active: bool = True
+    matches: np.ndarray = None       # (K,) int64
+    overflow: int = 0
+    neg_rejected: int = 0
+    closure_expansions: int = 0
+    pm_created: int = 0
+    replans: int = 0
+    deployments: int = 0
+    violations: int = 0
+    chunks: int = 0
+
+
+class _Bucket:
+    """One arity bucket: stacked tensors + plane + per-cell policies."""
+
+    def __init__(self, rb: "Rulebook", bspec: BucketSpec):
+        self.rb = rb
+        self.bspec = bspec
+        self.q_cap = 0
+        self.u_cap = 0
+        self.slots: List[Optional[_RuleEntry]] = []
+        self.group_members: List[List[int]] = []  # u -> member slots
+        self.free_slots: List[int] = []
+        self.free_groups: List[int] = []
+        # Host mirrors (device copies are patched in lockstep).
+        self.ops_h: Optional[RuleOps] = None
+        self.ops_d: Optional[RuleOps] = None
+        self.plans_h: Optional[np.ndarray] = None   # (K, Qb, n) i32
+        self.plans_d = None
+        self.rep_h: Optional[np.ndarray] = None     # (U,) i32
+        self.expand_h: Optional[np.ndarray] = None  # (Qb,) i32
+        self.share_d: Optional[ShareOps] = None
+        self.state = None
+        self.monitor = None
+        self.lowered: Optional[_Lowered2D] = None
+        self.policies: List[List] = []              # [k][q] -> policy
+        self.caps: Tuple[int, int] = (1, 1)
+        self.plane = None
+
+    # -- layout ------------------------------------------------------------
+
+    def _refresh_share(self) -> None:
+        self.share_d = ShareOps(
+            rep_idx=jnp.asarray(self.rep_h, jnp.int32),
+            expand_idx=jnp.asarray(self.expand_h, jnp.int32))
+
+    def _make_plane(self) -> None:
+        rb = self.rb
+        self.plane = make_rulebook_plane(
+            self.bspec, rb.engine_cfg, rb.k, rb.monitored,
+            laplace=rb.config.laplace, mesh=rb.mesh)
+
+    def build(self, entries: Sequence[Tuple[_RuleEntry, RuleOps,
+                                            np.ndarray, list, object]],
+              spare: int,
+              probe_patterns: Optional[Sequence[Pattern]] = None) -> None:
+        """Initial layout from (entry, ops_row, order, dcs, stat) tuples.
+
+        Entries arrive pre-grouped (``entry.group`` / ``entry.slot`` set);
+        ``spare`` free rule slots and group slots are pre-provisioned so
+        the first hot-adds are pure row writes.  ``probe_patterns`` seeds
+        the invariant-cap probe when the bucket opens empty (hot-add into
+        a new shape) — the incoming rule must fit the caps.
+        """
+        rb = self.rb
+        n_rules = len(entries)
+        n_groups = 1 + max((e.group for e, *_ in entries), default=-1)
+        self.q_cap = n_rules + spare
+        self.u_cap = n_groups + spare
+        rows = [None] * self.q_cap
+        self.slots = [None] * self.q_cap
+        self.group_members = [[] for _ in range(self.u_cap)]
+        self.rep_h = np.zeros((self.u_cap,), np.int32)
+        self.expand_h = np.zeros((self.q_cap,), np.int32)
+        self.plans_h = np.tile(np.arange(self.bspec.n, dtype=np.int32),
+                               (rb.k, self.q_cap, 1))
+        if rb.monitored:
+            self.policies = [[None] * self.q_cap for _ in range(rb.k)]
+            self.caps = self._probe_caps(
+                probe_patterns if probe_patterns is not None
+                else [e.pattern for e, *_ in entries])
+        low_rows: List[List[LoweredInvariants]] = [
+            [None] * self.q_cap for _ in range(rb.k)]
+        for entry, ops_row, order, dcs, stat in entries:
+            q, u = entry.slot, entry.group
+            rows[q] = ops_row
+            self.slots[q] = entry
+            self.group_members[u].append(q)
+            self.expand_h[q] = u
+            self.plans_h[:, q] = order
+            if rb.monitored:
+                for k in range(rb.k):
+                    pol = rb.config.policy_factory()()
+                    plan = _OrderRow(order)
+                    pol.on_replan(plan, dcs, stat)
+                    self.policies[k][q] = pol
+                    low_rows[k][q] = pol.compile(
+                        self.bspec.n, max_inv=self.caps[0],
+                        max_terms=self.caps[1])
+        for u, members in enumerate(self.group_members):
+            self.rep_h[u] = members[0] if members else 0
+        for q in range(self.q_cap):
+            if rows[q] is None:
+                rows[q] = pad_rule(self.bspec)
+                self.free_slots.append(q)
+        for u in range(self.u_cap):
+            if not self.group_members[u]:
+                self.free_groups.append(u)
+        if rb.monitored:
+            empty = self._empty_lowered()
+            for k in range(rb.k):
+                for q in range(self.q_cap):
+                    if low_rows[k][q] is None:
+                        low_rows[k][q] = empty
+            self.lowered = _Lowered2D.build(low_rows)
+            self.monitor = init_rule_monitor(
+                self.bspec, rb.k, self.q_cap, rb.config.estimator_buckets)
+        self.ops_h = stack_rule_ops(rows)
+        self.ops_d = jax.tree.map(jnp.asarray, self.ops_h)
+        self.plans_d = jnp.asarray(self.plans_h)
+        self._refresh_share()
+        self.state = init_rule_buffers(self.bspec, rb.engine_cfg, rb.k,
+                                       self.q_cap)
+        self._make_plane()
+
+    def _probe_caps(self, patterns: Sequence[Pattern]) -> Tuple[int, int]:
+        """Bucket-wide lowered-invariant caps from UNPINNED cold plans.
+
+        Pinning only removes deciding conditions (pinned blocks are
+        empty), so the free plan's invariant set is the per-rule worst
+        case; every cell then lowers at the bucket max so invariant
+        deployments stay row writes.  ``config.max_invariants/max_terms``
+        override upward.
+        """
+        rb = self.rb
+        i_cap = t_cap = 1
+        stat0 = uniform_stat(self.bspec.n)
+        for p in patterns:
+            plan, dcs = greedy_order_plan(p, stat0)
+            pol = rb.config.policy_factory()()
+            pol.on_replan(plan, dcs, stat0)
+            low = pol.compile(self.bspec.n)
+            i_cap = max(i_cap, low.active.shape[0])
+            t_cap = max(t_cap, low.scale.shape[-1])
+        if rb.config.max_invariants is not None:
+            i_cap = max(i_cap, int(rb.config.max_invariants))
+        if rb.config.max_terms is not None:
+            t_cap = max(t_cap, int(rb.config.max_terms))
+        return (i_cap, t_cap)
+
+    def _empty_lowered(self) -> LoweredInvariants:
+        """An inert invariant row (active all-False) for empty slots."""
+        from ..core.invariants import lower_invariants
+
+        return lower_invariants([], 0.0, self.bspec.n,
+                                max_inv=self.caps[0],
+                                max_terms=self.caps[1])
+
+    # -- growth (the one retrace point) ------------------------------------
+
+    def grow_slots(self) -> None:
+        """Double the rule capacity: pad every host/device tensor along the
+        rule axis.  The next dispatch re-enters the same jitted plane with
+        the new Qb — one retrace, no new compile cache entry."""
+        rb = self.rb
+        old, new = self.q_cap, max(1, self.q_cap * 2)
+        pad_n = new - old
+        pad_rows = [pad_rule(self.bspec)] * pad_n
+        self.ops_h = RuleOps(*(
+            np.concatenate([getattr(self.ops_h, f),
+                            np.stack([np.asarray(getattr(r, f))
+                                      for r in pad_rows])])
+            for f in RuleOps._fields))
+        self.ops_d = jax.tree.map(jnp.asarray, self.ops_h)
+        self.plans_h = np.concatenate(
+            [self.plans_h,
+             np.tile(np.arange(self.bspec.n, dtype=np.int32),
+                     (rb.k, pad_n, 1))], axis=1)
+        self.plans_d = jnp.asarray(self.plans_h)
+        self.expand_h = np.concatenate(
+            [self.expand_h, np.zeros((pad_n,), np.int32)])
+        self._refresh_share()
+        self.state = jax.tree.map(
+            lambda x: jnp.pad(x, ((0, 0), (0, pad_n)) +
+                              ((0, 0),) * (x.ndim - 2)), self.state)
+        if rb.monitored:
+            self.monitor = jax.tree.map(
+                lambda x: jnp.pad(x, ((0, 0), (0, pad_n)) +
+                                  ((0, 0),) * (x.ndim - 2)), self.monitor)
+            self.lowered.grow(new)
+            empty = self._empty_lowered()
+            for k in range(rb.k):
+                self.policies[k].extend([None] * pad_n)
+                for q in range(old, new):
+                    self.lowered.write(k, q, empty)
+        self.slots.extend([None] * pad_n)
+        self.free_slots.extend(range(old, new))
+        self.q_cap = new
+
+    def grow_groups(self) -> None:
+        old, new = self.u_cap, max(1, self.u_cap * 2)
+        self.rep_h = np.concatenate(
+            [self.rep_h, np.zeros((new - old,), np.int32)])
+        self.group_members.extend([] for _ in range(new - old))
+        self.free_groups.extend(range(old, new))
+        self._refresh_share()
+        self.u_cap = new
+
+    # -- row writes --------------------------------------------------------
+
+    def write_ops_row(self, q: int, row: RuleOps) -> None:
+        for f in RuleOps._fields:
+            np.asarray(getattr(self.ops_h, f))[q] = np.asarray(
+                getattr(row, f))
+        self.ops_d = None
+
+    def write_plan_row(self, k: int, q: int, order: np.ndarray) -> None:
+        self.plans_h[k, q] = order
+        self.plans_d = None
+
+    def write_plan_all_k(self, q: int, order: np.ndarray) -> None:
+        self.plans_h[:, q] = order
+        self.plans_d = None
+
+    def ops_device(self) -> RuleOps:
+        if self.ops_d is None:
+            self.ops_d = jax.tree.map(jnp.asarray, self.ops_h)
+        return self.ops_d
+
+    def plans_device(self):
+        if self.plans_d is None:
+            self.plans_d = jnp.asarray(self.plans_h)
+        return self.plans_d
+
+    def zero_state_row(self, q: int) -> None:
+        self.state = jax.tree.map(
+            lambda x: x.at[:, q].set(jnp.zeros_like(x[:, q])), self.state)
+        if self.monitor is not None:
+            self.monitor = jax.tree.map(
+                lambda x: x.at[:, q].set(jnp.zeros_like(x[:, q])),
+                self.monitor)
+
+
+class _OrderRow:
+    """Minimal plan object handed to decision policies (order-only)."""
+
+    def __init__(self, order):
+        self.order = tuple(int(o) for o in order)
+
+
+class Rulebook:
+    """Q patterns, one compiled data plane per arity bucket.
+
+    Construct via :func:`open_rulebook`.  ``step``/``run`` advance every
+    rule at once; ``add_rule``/``remove_rule`` mutate the rule set live.
+    """
+
+    def __init__(self, rules: Sequence, *, partitions: int = 1,
+                 monitor: bool = True,
+                 config: Optional[RuntimeConfig] = None,
+                 spare_slots: int = 0):
+        if partitions < 1:
+            raise ValueError("partitions must be >= 1")
+        self.config = config or RuntimeConfig()
+        if self.config.superchunk > 1:
+            raise ValueError("rulebooks step per chunk; superchunk > 1 is "
+                             "not supported yet")
+        self.k = int(partitions)
+        self.monitored = bool(monitor)
+        if self.monitored and self.config.policy != "invariant":
+            raise ValueError(
+                "monitored rulebooks verify lowered invariant sets on "
+                "device; config.policy must be 'invariant' "
+                f"(got {self.config.policy!r})")
+        self.engine_cfg: EngineConfig = self.config.engine()
+        self.mesh = resolve_cep_mesh(self.config.mesh, self.k)
+        self.spare_slots = int(spare_slots)
+        patterns = [self._check_pattern(as_pattern(r)) for r in rules]
+        if not patterns:
+            raise ValueError("open_rulebook needs at least one rule")
+        # Rulebook-wide attribute width: chunks are shared by every rule.
+        self.n_attrs = max(p.n_attrs for p in patterns)
+        patterns = [self._widen(p) for p in patterns]
+        self._rules: List[_RuleEntry] = []
+        self._buckets: List[_Bucket] = []
+        self._chunks = 0
+        self._host_syncs = 0
+        self._build(patterns)
+
+    # -- construction -------------------------------------------------------
+
+    def _check_pattern(self, p) -> Pattern:
+        if isinstance(p, CompositePattern):
+            raise ValueError(
+                "OR-composites decompose into independent branches; add "
+                "each branch to the rulebook as its own rule")
+        return p
+
+    def _widen(self, p: Pattern) -> Pattern:
+        if p.n_attrs > self.n_attrs:
+            raise ValueError("rule exceeds rulebook attribute width")
+        if p.n_attrs != self.n_attrs:
+            p = dataclasses.replace(p, n_attrs=self.n_attrs)
+        return p
+
+    def _bucket_key(self, p: Pattern):
+        spec = make_spec(p)
+        return (spec.n, spec.has_neg, spec.kleene_pos is not None,
+                len(spec.neg_rows))
+
+    def _build(self, patterns: Sequence[Pattern]) -> None:
+        # rid == position in the caller's rule list; buckets regroup the
+        # rules physically but never renumber them.
+        base = len(self._rules)
+        self._rules.extend([None] * len(patterns))
+        by_shape: Dict[tuple, List[Tuple[int, Pattern]]] = {}
+        for idx, p in enumerate(patterns):
+            n, has_neg, has_kl, _ = self._bucket_key(p)
+            by_shape.setdefault((n, has_neg, has_kl), []).append((idx, p))
+        stat0_cache: Dict[int, Stat] = {}
+        for (n, has_neg, has_kl), ps in by_shape.items():
+            neg_cap = max((len(make_spec(p).neg_rows) for _, p in ps),
+                          default=0)
+            bspec = BucketSpec(n=n, has_neg=has_neg, has_kleene=has_kl,
+                               n_attrs=self.n_attrs, neg_rows_cap=neg_cap)
+            bucket = _Bucket(self, bspec)
+            stat0 = stat0_cache.setdefault(n, uniform_stat(n))
+            # Cold-plan free, then group by the leading sub-join.
+            cold = [greedy_order_plan(p, stat0) for _, p in ps]
+            groups: Dict[tuple, int] = {}
+            assignments = []
+            for (_, p), (plan, _) in zip(ps, cold):
+                key = _prefix_key(p, plan.order)
+                assignments.append(groups.setdefault(key, len(groups)))
+            group_sizes = np.bincount(assignments, minlength=len(groups))
+            entries = []
+            for slot, ((idx, p), (plan, dcs), u) in enumerate(
+                    zip(ps, cold, assignments)):
+                pinned: Tuple[int, ...] = ()
+                if group_sizes[u] >= 2:
+                    pinned = tuple(int(o) for o in plan.order[:2])
+                    plan, dcs = greedy_order_plan(p, stat0, pin=pinned)
+                entry = _RuleEntry(
+                    rid=base + idx, pattern=p, bucket=bucket,
+                    slot=slot, group=u, pinned=pinned,
+                    matches=np.zeros((self.k,), np.int64))
+                self._rules[base + idx] = entry
+                entries.append((entry, lower_rule(p, bspec),
+                                np.asarray(plan.order, np.int32), dcs,
+                                stat0))
+            bucket.build(entries, self.spare_slots)
+            self._buckets.append(bucket)
+
+    # -- data plane ---------------------------------------------------------
+
+    def step(self, chunk: Chunk, t0: float, t1: float) -> np.ndarray:
+        """Advance every rule one tick over an already-stacked chunk.
+
+        ``chunk`` fields carry a leading K axis (a bare single-partition
+        ``Chunk`` is accepted when K = 1).  Returns this tick's full-match
+        counts as an (R, K) array over rules in insertion order (removed
+        rules contribute zero rows).  Monitored rulebooks also run the
+        violation → sync → replan → row-deploy loop per flagged (q, k)
+        cell inside the call.
+        """
+        if chunk.type_id.ndim == 1:
+            if self.k != 1:
+                raise ValueError("unstacked chunk on a multi-partition "
+                                 "rulebook; stack K per-partition chunks")
+            chunk = stack_chunks([chunk])
+        if chunk.attr.shape[-1] != self.n_attrs:
+            raise ValueError(
+                f"chunk has {chunk.attr.shape[-1]} attributes; this "
+                f"rulebook is compiled for {self.n_attrs}")
+        t0j, t1j = jnp.float32(t0), jnp.float32(t1)
+        self._chunks += 1
+        out = np.zeros((len(self._rules), self.k), np.int64)
+        for bucket in self._buckets:
+            if self.monitored:
+                (bucket.state, bucket.monitor, res, violated, _drift,
+                 rates, sel) = bucket.plane.fn(
+                     bucket.state, bucket.monitor, chunk,
+                     bucket.ops_device(), bucket.share_d,
+                     bucket.plans_device(),
+                     bucket.lowered.device(), t0j, t1j)
+            else:
+                bucket.state, res = bucket.plane.fn(
+                    bucket.state, chunk, bucket.ops_device(),
+                    bucket.share_d, bucket.plans_device(), t0j, t1j)
+            # One coalesced counter transfer per bucket per tick.
+            cnt = np.asarray(jnp.stack(
+                [res.full, res.pm, res.overflow, res.closure, res.neg]))
+            self._host_syncs += 1
+            for q, entry in enumerate(bucket.slots):
+                if entry is None or not entry.active:
+                    continue
+                full_k = cnt[0, :, q].astype(np.int64)
+                entry.matches += full_k
+                entry.pm_created += int(cnt[1, :, q].sum())
+                entry.overflow += int(cnt[2, :, q].sum())
+                entry.closure_expansions += int(cnt[3, :, q].sum())
+                entry.neg_rejected += int(cnt[4, :, q].sum())
+                entry.chunks += 1
+                out[entry.rid] = full_k
+            if self.monitored:
+                fired = np.nonzero(np.asarray(violated))
+                if fired[0].size:
+                    # One coalesced stats transfer serves every fired
+                    # cell; per-cell device indexing costs a sync each.
+                    self._host_syncs += 1
+                    rates_h = np.asarray(rates, np.float64)
+                    sel_h = np.asarray(sel, np.float64)
+                    for k, q in zip(*fired):
+                        self._replan_cell(bucket, int(k), int(q),
+                                          rates_h, sel_h)
+        return out
+
+    def _replan_cell(self, bucket: _Bucket, k: int, q: int,
+                     rates, sel) -> None:
+        """Invariant violation at cell (k, q): re-run the planner on that
+        cell's device statistics and deploy plan + invariant rows."""
+        entry = bucket.slots[q]
+        if entry is None or not entry.active:
+            return
+        entry.violations += 1
+        stat = Stat(np.asarray(rates[k, q], np.float64),
+                    np.asarray(sel[k, q], np.float64))
+        plan, dcs = greedy_order_plan(entry.pattern, stat,
+                                      pin=entry.pinned)
+        order = np.asarray(plan.order, np.int32)
+        changed = not np.array_equal(order, bucket.plans_h[k, q])
+        bucket.write_plan_row(k, q, order)
+        pol = bucket.policies[k][q]
+        pol.on_replan(plan, dcs, stat)
+        bucket.lowered.write(k, q, pol.compile(
+            bucket.bspec.n, max_inv=bucket.caps[0],
+            max_terms=bucket.caps[1]))
+        entry.replans += 1
+        if changed:
+            entry.deployments += 1
+
+    def run(self, stream: Stream) -> Telemetry:
+        """Consume a chunk stream (any shape ``cep.Session.run`` accepts)
+        and return this run's aggregate ``Telemetry``.  Stream state
+        persists across calls, so feeding a stream in segments is
+        equivalent to one continuous run."""
+        before = self.telemetry()
+        for fc in _normalize_stream(stream, self.k):
+            self.step(fc.chunk, fc.t0, fc.t1)
+        after = self.telemetry()
+        delta = Telemetry(partitions=self.k)
+        for f in ("chunks", "matches", "replans", "deployments",
+                  "violations", "host_syncs", "overflow", "neg_rejected",
+                  "closure_expansions"):
+            setattr(delta, f, getattr(after, f) - getattr(before, f))
+        if after.per_partition_matches is not None:
+            base = (before.per_partition_matches
+                    if before.per_partition_matches is not None
+                    else np.zeros((self.k,), np.int64))
+            delta.per_partition_matches = (
+                after.per_partition_matches - base)
+        return delta
+
+    # -- rule lifecycle ------------------------------------------------------
+
+    def add_rule(self, rule) -> int:
+        """Hot-add a rule; returns its rule id.
+
+        Pure row writes into a free slot when one exists (ops row, plan
+        rows, invariant rows, zeroed state rows — zero recompiles,
+        asserted by ``trace_count()`` staying flat); growing a full
+        bucket's capacity, or opening a bucket for a shape the rulebook
+        has never seen, is the documented retrace/compile point.  The new
+        rule always starts its own prefix group.
+        """
+        p = self._widen(self._check_pattern(as_pattern(rule)))
+        n, has_neg, has_kl, neg_rows = self._bucket_key(p)
+        bucket = None
+        for b in self._buckets:
+            if (b.bspec.n, b.bspec.has_neg, b.bspec.has_kleene) == \
+                    (n, has_neg, has_kl) and \
+                    neg_rows <= b.bspec.neg_rows_cap:
+                bucket = b
+                break
+        if bucket is None:
+            bucket = _Bucket(self, BucketSpec(
+                n=n, has_neg=has_neg, has_kleene=has_kl,
+                n_attrs=self.n_attrs, neg_rows_cap=neg_rows))
+            bucket.build([], max(1, self.spare_slots),
+                         probe_patterns=[p])
+            self._buckets.append(bucket)
+        if not bucket.free_slots:
+            bucket.grow_slots()
+        if not bucket.free_groups:
+            bucket.grow_groups()
+        q = bucket.free_slots.pop(0)
+        u = bucket.free_groups.pop(0)
+        stat0 = uniform_stat(n)
+        plan, dcs = greedy_order_plan(p, stat0)
+        order = np.asarray(plan.order, np.int32)
+        entry = _RuleEntry(
+            rid=len(self._rules), pattern=p, bucket=bucket, slot=q,
+            group=u, pinned=(), matches=np.zeros((self.k,), np.int64))
+        self._rules.append(entry)
+        bucket.slots[q] = entry
+        bucket.group_members[u] = [q]
+        bucket.rep_h[u] = q
+        bucket.expand_h[q] = u
+        bucket._refresh_share()
+        bucket.zero_state_row(q)
+        bucket.write_ops_row(q, lower_rule(p, bucket.bspec))
+        bucket.write_plan_all_k(q, order)
+        if self.monitored:
+            for k in range(self.k):
+                pol = self.config.policy_factory()()
+                pol.on_replan(_OrderRow(order), dcs, stat0)
+                bucket.policies[k][q] = pol
+                bucket.lowered.write(k, q, pol.compile(
+                    n, max_inv=bucket.caps[0], max_terms=bucket.caps[1]))
+        entry.deployments += 1
+        return entry.rid
+
+    def remove_rule(self, rid: int) -> None:
+        """Hot-remove a rule: mask its slot out (row writes, no recompile).
+        The slot is recycled by a later ``add_rule``."""
+        entry = self._entry(rid)
+        if not entry.active:
+            raise ValueError(f"rule {rid} already removed")
+        bucket, q, u = entry.bucket, entry.slot, entry.group
+        entry.active = False
+        pad = pad_rule(bucket.bspec)
+        bucket.write_ops_row(q, pad)
+        bucket.slots[q] = None
+        bucket.free_slots.append(q)
+        members = bucket.group_members[u]
+        members.remove(q)
+        if not members:
+            bucket.free_groups.append(u)
+        elif int(bucket.rep_h[u]) == q:
+            # Any member can represent the group: the prefix key pins
+            # every operand of the shared first join step.
+            bucket.rep_h[u] = members[0]
+            bucket._refresh_share()
+        if self.monitored:
+            for k in range(self.k):
+                bucket.policies[k][q] = None
+                bucket.lowered.write(k, q, bucket._empty_lowered())
+
+    def _entry(self, rid: int) -> _RuleEntry:
+        if not (0 <= rid < len(self._rules)):
+            raise KeyError(f"unknown rule id {rid}")
+        return self._rules[rid]
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def rules(self) -> Tuple[int, ...]:
+        """Active rule ids, insertion-ordered."""
+        return tuple(e.rid for e in self._rules if e.active)
+
+    @property
+    def match_counts(self) -> np.ndarray:
+        """(R, K) cumulative full-match counts over all rules ever added
+        (removed rules keep their totals)."""
+        return np.stack([e.matches for e in self._rules])
+
+    def sharing_ratio(self) -> float:
+        """Active rules per active prefix group (1.0 = no sharing)."""
+        n_rules = sum(1 for e in self._rules if e.active)
+        n_groups = sum(1 for b in self._buckets
+                       for m in b.group_members if m)
+        return n_rules / max(n_groups, 1)
+
+    def trace_count(self) -> int:
+        """Total plane (re)traces — the hot-add zero-recompile probe."""
+        return sum(b.plane.traces for b in self._buckets)
+
+    def telemetry(self, rule: Optional[int] = None) -> Telemetry:
+        """Cumulative telemetry, aggregate or for one rule id."""
+        entries = ([self._entry(rule)] if rule is not None
+                   else self._rules)
+        tel = Telemetry(partitions=self.k)
+        tel.per_partition_matches = np.zeros((self.k,), np.int64)
+        for e in entries:
+            tel.matches += int(e.matches.sum())
+            tel.per_partition_matches += e.matches
+            tel.overflow += e.overflow
+            tel.neg_rejected += e.neg_rejected
+            tel.closure_expansions += e.closure_expansions
+            tel.replans += e.replans
+            tel.deployments += e.deployments
+            tel.violations += e.violations
+        tel.chunks = (self._entry(rule).chunks if rule is not None
+                      else self._chunks)
+        tel.host_syncs = self._host_syncs
+        return tel
+
+    def reset(self) -> None:
+        """Clear stream state (rings, monitors, counters); keep compiled
+        planes, the rule set and deployed plans."""
+        for bucket in self._buckets:
+            bucket.state = init_rule_buffers(
+                bucket.bspec, self.engine_cfg, self.k, bucket.q_cap)
+            if self.monitored:
+                bucket.monitor = init_rule_monitor(
+                    bucket.bspec, self.k, bucket.q_cap,
+                    self.config.estimator_buckets)
+        for e in self._rules:
+            e.matches = np.zeros((self.k,), np.int64)
+            e.overflow = e.neg_rejected = e.closure_expansions = 0
+            e.pm_created = e.chunks = 0
+        self._chunks = 0
+        self._host_syncs = 0
+
+
+def open_rulebook(rules: Iterable, *, partitions: int = 1,
+                  monitor: bool = True,
+                  config: Optional[RuntimeConfig] = None,
+                  spare_slots: int = 0) -> Rulebook:
+    """Open a rulebook: Q patterns behind one compiled data plane per
+    arity bucket.
+
+    Parameters
+    ----------
+    rules:       patterns (``P`` builders or ``Pattern``s; OR-composites
+                 must be added branch-by-branch).
+    partitions:  K stream partitions, exactly as ``cep.open``; the Q×K
+                 plane shards over ``config.mesh`` when set.
+    monitor:     fuse statistics rings + per-(q, k) invariant verification
+                 into the plane; ``False`` runs static cold plans.
+    config:      a :class:`RuntimeConfig` (``superchunk`` must stay 1).
+    spare_slots: pre-provisioned free rule/group slots per bucket so that
+                 many hot-adds are pure row writes (zero retraces).
+    """
+    return Rulebook(list(rules), partitions=partitions, monitor=monitor,
+                    config=config, spare_slots=spare_slots)

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -142,7 +143,14 @@ def stacked_streams(streams: Sequence[Iterable]) -> Iterable[FleetChunk]:
 # multi-second trace again for every rung.  Sharing the jitted callable
 # shares the cache.  Meshed engines are excluded: mesh objects are not
 # value-hashable and shard_map closures pin device orders.
-_TRACE_MEMO: dict = {}
+#
+# The memo is LRU-bounded: long-lived processes that churn configurations
+# (capacity sweeps, many-tenant rulebooks, test suites) would otherwise
+# pin every jitted program they ever built.  Eviction drops our reference
+# to the callable — jax's compile cache entries die with it once callers
+# let go too.
+_TRACE_MEMO: "OrderedDict" = OrderedDict()
+_TRACE_MEMO_CAP = 64
 
 
 def _shared_trace(key, build):
@@ -151,7 +159,22 @@ def _shared_trace(key, build):
     fn = _TRACE_MEMO.get(key)
     if fn is None:
         fn = _TRACE_MEMO[key] = build()
+        while len(_TRACE_MEMO) > _TRACE_MEMO_CAP:
+            _TRACE_MEMO.popitem(last=False)
+    else:
+        _TRACE_MEMO.move_to_end(key)
     return fn
+
+
+def clear_trace_memo() -> None:
+    """Drop every memoized jitted fleet/rulebook program.
+
+    Existing engines keep working (they hold their own references); new
+    equal-config engines re-trace once.  Useful to release compile-cache
+    memory in long-lived processes, and in tests that assert tracing
+    behavior from a clean slate.
+    """
+    _TRACE_MEMO.clear()
 
 
 class FleetEngine:

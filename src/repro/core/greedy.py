@@ -30,9 +30,17 @@ from .stats import Stat
 
 
 def greedy_order_plan(
-    pattern: Pattern, stat: Stat
+    pattern: Pattern, stat: Stat, pin: Tuple[int, ...] = ()
 ) -> Tuple[OrderPlan, DCSList]:
-    """Run Algorithm 2 and capture per-block deciding condition sets."""
+    """Run Algorithm 2 and capture per-block deciding condition sets.
+
+    ``pin`` forces the first ``len(pin)`` plan steps to the given
+    positions regardless of statistics (used by the rulebook's prefix
+    sharing, which must keep every member of a shared group on the same
+    leading sub-join).  Pinned steps are decided by fiat, not by argmin
+    comparisons, so they contribute empty deciding-condition sets — the
+    invariant machinery simply has nothing to verify for them.
+    """
     n = pattern.n
     sel_pairs = frozenset(
         {(p, q) for p, q in pattern.selectivity_pairs()}
@@ -44,6 +52,16 @@ def greedy_order_plan(
     dcs_list: DCSList = []
 
     for step in range(n):
+        if step < len(pin):
+            winner = pin[step]
+            if winner not in remaining:
+                raise ValueError(f"pinned position {winner} not available "
+                                 f"at step {step}")
+            dcs_list.append((f"pin{step}:pos{winner}", []))
+            order.append(winner)
+            prefix = prefix + (winner,)
+            remaining.remove(winner)
+            continue
         # Score every remaining candidate under the current prefix.
         exprs = {
             j: order_step_score_expr(j, prefix, sel_pairs) for j in remaining

@@ -24,7 +24,7 @@ import numpy as np
 from ...cep.dsl import P
 from .base import Scenario, Segment
 
-__all__ = ["make"]
+__all__ = ["make", "rulebook_patterns"]
 
 TEMP, HUMID, GAS, ACK = 0, 1, 2, 3
 
@@ -42,6 +42,28 @@ def _pattern():
             .where(P.attr(0) < P.attr(1) + 0.3,
                    P.attr(1) < P.attr(2) + 0.3)
             .within(3.0))
+
+
+def _ack_pattern():
+    # The benign counterpart of the alert: a spike the operator
+    # acknowledged inside the reporting window.  Seeds on the rare spike,
+    # so the cold plan stays optimal through the control segment.
+    return P.seq(TEMP, ACK).within(3.0)
+
+
+def _combo_pattern():
+    # Fraud-style combo: humidity drop and gas alarm co-occurring (either
+    # order) with ascending readings — the cross-sensor correlation rule
+    # a tenant layers on top of the alert chain.
+    return (P.and_(HUMID, GAS)
+            .where(P.attr(0) < P.attr(1) + 0.3)
+            .within(2.0))
+
+
+def rulebook_patterns():
+    """The 3-rule tenant rulebook (alert + ack + fraud-combo) used by the
+    rulebook replay tie-in; rule 0 is the scenario's gated alert chain."""
+    return [_pattern(), _ack_pattern(), _combo_pattern()]
 
 
 def _trajectory(partition: int, seed: int, sc: Scenario):

@@ -13,6 +13,8 @@ switches backend with one flag.
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 from . import ref as _ref
@@ -27,6 +29,14 @@ _BACKEND = None
 
 
 def default_backend() -> str:
+    # CI's parity matrix forces the engine-wide default through the
+    # environment (set_backend / per-call overrides still win).
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in ("ref", "pallas", "interpret"):
+            raise ValueError(f"REPRO_KERNEL_BACKEND={env!r} is not one of "
+                             "'ref' | 'pallas' | 'interpret'")
+        return env
     try:
         platform = jax.devices()[0].platform
     except Exception:  # pragma: no cover - no devices

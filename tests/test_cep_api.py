@@ -20,6 +20,7 @@ from repro.core.patterns import (
 DOCUMENTED_SURFACE = {
     "P", "open", "Session", "Telemetry", "RuntimeConfig",
     "Pattern", "CompositePattern", "OrderPlan", "TreePlan", "RefEngine",
+    "open_rulebook", "Rulebook",
 }
 
 

@@ -1,0 +1,258 @@
+"""Rulebook: Q heterogeneous patterns behind one data plane per bucket.
+
+The load-bearing property is *bitwise* equivalence: with zero overflow,
+per-rule counters from one stacked dispatch must equal Q independent
+monitored Sessions AND the brute-force oracle, through replans, hot
+add/remove, and stream resume.  Overflow is asserted zero everywhere —
+match-capacity truncation makes counts plan-dependent, so a failure here
+means the test sizing is wrong, not the engine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cep as cep
+from repro.cep import P, RuntimeConfig
+from repro.cep.rulebook import open_rulebook
+from repro.core import fleet
+from repro.core.engine import Chunk
+from repro.core.fleet import FleetChunk
+from repro.core.greedy import greedy_order_plan
+from repro.core.ref_engine import RefEngine
+from repro.core.stats import uniform_stat
+
+A = 2
+K = 2
+CAP = 24
+CFG = RuntimeConfig(buffer_capacity=24, match_capacity=512,
+                    estimator_buckets=8)
+
+
+def rule_pool():
+    """Mixed shapes: two shared-prefix SEQs, AND, pair, NEG, Kleene."""
+    return [
+        P.seq(0, 1, 2).where(P.attr(0, 0) < P.attr(1, 0) + 0.4)
+            .within(2.0).attrs(A),
+        P.seq(0, 1, 4).where(P.attr(0, 0) < P.attr(1, 0) + 0.4,
+                             P.attr(1, 1) < P.attr(2, 0) + 0.3)
+            .within(2.0).attrs(A),
+        P.and_(3, 1, 4).where(P.attr(0, 1) < P.attr(2, 0) + 0.1)
+            .within(2.0).attrs(A),
+        P.seq(2, 4).within(1.5).attrs(A),
+        P.seq(0, P.neg(3), 1, 2).where(P.attr(0, 0) < P.attr(1, 0) + 0.3)
+            .within(3.0).attrs(A),
+        P.seq(3, P.kleene(4, 2), 1).within(2.5).attrs(A),
+        P.seq(4, 2, 0).where(P.attr(0, 1) < P.attr(1, 0) + 0.5)
+            .within(1.5).attrs(A),
+        P.and_(0, 2).within(1.0).attrs(A),
+    ]
+
+
+def make_chunks(rng, n_chunks, k=K):
+    """Stacked chunks + the raw per-partition arrays for the oracle."""
+    out = []
+    for step in range(n_chunks):
+        t0, t1 = float(step), float(step + 1)
+        parts, raw = [], []
+        for _ in range(k):
+            n = int(rng.integers(4, 10))
+            tid = rng.integers(0, 5, size=n).astype(np.int32)
+            ts = np.sort(rng.uniform(t0, t1, size=n)).astype(np.float32)
+            attr = rng.normal(size=(n, A)).astype(np.float32)
+            raw.append((tid, ts, attr))
+            pad = CAP - n
+            parts.append(Chunk(
+                type_id=jnp.asarray(np.pad(tid, (0, pad),
+                                           constant_values=-1)),
+                ts=jnp.asarray(np.pad(ts, (0, pad))),
+                attr=jnp.asarray(np.pad(attr, ((0, pad), (0, 0)))),
+                valid=jnp.asarray(np.arange(CAP) < n)))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        out.append((stacked, raw, t0, t1))
+    return out
+
+
+def assert_no_overflow(rb, sessions):
+    assert rb.telemetry().overflow == 0
+    for s in sessions:
+        assert s.telemetry().overflow == 0
+
+
+@pytest.mark.parametrize("q", [2, 8])
+def test_rulebook_equals_sessions_and_oracle(rng, q):
+    rules = rule_pool()[:q]
+    chunks = make_chunks(rng, 8)
+    rb = open_rulebook(rules, partitions=K, monitor=True, config=CFG)
+    sessions = [cep.open(r, partitions=K, monitor=True, config=CFG)
+                for r in rules]
+    refs = [[RefEngine(r.build()) for _ in range(K)] for r in rules]
+
+    sess_counts = np.zeros((q, K), np.int64)
+    ref_counts = np.zeros((q, K), np.int64)
+    for stacked, raw, t0, t1 in chunks:
+        rb.step(stacked, t0, t1)
+        for i, s in enumerate(sessions):
+            sess_counts[i] += np.asarray(s.step(stacked, t0, t1))
+        for i in range(q):
+            for k, (tid, ts, attr) in enumerate(raw):
+                ref_counts[i, k] += refs[i][k].process_chunk(
+                    tid, ts, attr, t0, t1).full_matches
+
+    assert_no_overflow(rb, sessions)
+    assert np.array_equal(rb.match_counts, sess_counts)
+    assert np.array_equal(rb.match_counts, ref_counts)
+    if q >= 2:
+        # rules 0 and 1 share their (0, 1) opening join
+        assert rb.sharing_ratio() > 1.0
+
+
+def test_hot_add_remove_midstream(rng):
+    rules = rule_pool()[:6]
+    chunks = make_chunks(rng, 12)
+    rb = open_rulebook(rules, partitions=K, monitor=True, config=CFG,
+                       spare_slots=1)
+    sessions = [cep.open(r, partitions=K, monitor=True, config=CFG)
+                for r in rules]
+    sess_counts = np.zeros((len(rules), K), np.int64)
+
+    for stacked, _, t0, t1 in chunks[:5]:
+        rb.step(stacked, t0, t1)
+        for i, s in enumerate(sessions):
+            sess_counts[i] += np.asarray(s.step(stacked, t0, t1))
+
+    # hot add into the pre-provisioned spare slot: zero retraces even
+    # after the next dispatch (the trace counter bumps lazily).
+    new_rule = rule_pool()[6]
+    pre = rb.trace_count()
+    rid = rb.add_rule(new_rule)
+    s_new = cep.open(new_rule, partitions=K, monitor=True, config=CFG)
+    new_counts = np.zeros((K,), np.int64)
+    for stacked, _, t0, t1 in chunks[5:9]:
+        rb.step(stacked, t0, t1)
+        for i, s in enumerate(sessions):
+            sess_counts[i] += np.asarray(s.step(stacked, t0, t1))
+        new_counts += np.asarray(s_new.step(stacked, t0, t1))
+    assert rb.trace_count() == pre
+    assert np.array_equal(rb.match_counts[rid], new_counts)
+    assert np.array_equal(rb.match_counts[:6], sess_counts)
+
+    # remove one shared-group member and the group's representative;
+    # survivors must stay bit-identical and removed rows go silent.
+    rb.remove_rule(1)
+    rb.remove_rule(0)
+    for stacked, _, t0, t1 in chunks[9:]:
+        out = rb.step(stacked, t0, t1)
+        assert out[0].sum() == 0 and out[1].sum() == 0
+        for i, s in enumerate(sessions[2:], start=2):
+            sess_counts[i] += np.asarray(s.step(stacked, t0, t1))
+    assert np.array_equal(rb.match_counts[2:6], sess_counts[2:])
+    assert 0 not in rb.rules and 1 not in rb.rules
+    assert_no_overflow(rb, sessions[2:] + [s_new])
+
+
+def test_bucket_growth_is_the_only_retrace(rng):
+    # A buffer_capacity no other test uses: traces are shared process-wide
+    # by (bucket, engine-config) key, so a config reused elsewhere may
+    # already have the grown shape in cache and absorb the retrace.
+    cfg = RuntimeConfig(buffer_capacity=28, match_capacity=512,
+                        estimator_buckets=8)
+    rules = [rule_pool()[3], rule_pool()[7]]  # one full n=2 bucket, no spare
+    rb = open_rulebook(rules, partitions=K, monitor=True, config=cfg)
+    chunks = make_chunks(rng, 4)
+    stacked, _, t0, t1 = chunks[0]
+    rb.step(stacked, t0, t1)
+    pre = rb.trace_count()
+    rb.add_rule(P.seq(1, 3).within(1.0).attrs(A))  # full -> cap 2 -> 4
+    stacked, _, t0, t1 = chunks[1]
+    rb.step(stacked, t0, t1)          # growth retraces on next dispatch
+    assert rb.trace_count() == pre + 1
+    rb.add_rule(P.seq(0, 4).within(1.0).attrs(A))  # doubled cap has room
+    stacked, _, t0, t1 = chunks[2]
+    rb.step(stacked, t0, t1)
+    assert rb.trace_count() == pre + 1
+
+
+def test_run_resume_segments(rng):
+    rules = rule_pool()[:3]
+    chunks = make_chunks(rng, 10)
+    fcs = [FleetChunk(chunk=stacked, t0=t0, t1=t1)
+           for stacked, _, t0, t1 in chunks]
+    rb_one = open_rulebook(rules, partitions=K, monitor=True, config=CFG)
+    tel = rb_one.run(fcs)
+    rb_two = open_rulebook(rules, partitions=K, monitor=True, config=CFG)
+    tel_a = rb_two.run(fcs[:5])
+    tel_b = rb_two.run(fcs[5:])
+    assert np.array_equal(rb_one.match_counts, rb_two.match_counts)
+    assert tel.matches == tel_a.matches + tel_b.matches
+    assert tel.chunks == tel_a.chunks + tel_b.chunks == 10
+
+
+def test_mesh_d1_path_matches(rng):
+    pytest.importorskip("jax")
+    rules = rule_pool()[:2]
+    chunks = make_chunks(rng, 4)
+    cfg = RuntimeConfig(buffer_capacity=24, match_capacity=512,
+                        estimator_buckets=8, mesh=1)
+    rb_mesh = open_rulebook(rules, partitions=K, monitor=True, config=cfg)
+    rb_plain = open_rulebook(rules, partitions=K, monitor=True, config=CFG)
+    for stacked, _, t0, t1 in chunks:
+        rb_mesh.step(stacked, t0, t1)
+        rb_plain.step(stacked, t0, t1)
+    assert np.array_equal(rb_mesh.match_counts, rb_plain.match_counts)
+
+
+def test_rulebook_input_validation(rng):
+    with pytest.raises(ValueError, match="OR"):
+        open_rulebook([P.or_(P.seq(0, 1).within(2.0),
+                             P.seq(1, 2).within(2.0))])
+    with pytest.raises(ValueError, match="superchunk"):
+        open_rulebook([P.seq(0, 1).within(2.0)],
+                      config=RuntimeConfig(superchunk=4))
+    with pytest.raises(ValueError, match="invariant"):
+        open_rulebook([P.seq(0, 1).within(2.0)], monitor=True,
+                      config=RuntimeConfig(policy="threshold"))
+    rb = open_rulebook([P.seq(0, 1).within(2.0).attrs(A)], partitions=K,
+                       monitor=False, config=CFG)
+    stacked, _, t0, t1 = make_chunks(rng, 1)[0]
+    with pytest.raises(ValueError, match="attribute"):
+        rb.step(Chunk(type_id=stacked.type_id, ts=stacked.ts,
+                      attr=stacked.attr[..., :1], valid=stacked.valid),
+                t0, t1)
+    with pytest.raises(ValueError, match="stack"):
+        rb.step(jax.tree.map(lambda x: x[0], stacked), t0, t1)
+
+
+def test_greedy_pin_prefix():
+    pat = rule_pool()[1].build()
+    stat = uniform_stat(pat.n)
+    free_plan, _ = greedy_order_plan(pat, stat)
+    pin = tuple(int(o) for o in free_plan.order[:2])
+    plan, dcs = greedy_order_plan(pat, stat, pin=pin)
+    assert tuple(plan.order[:2]) == pin
+    # pinned steps contribute no decision rows (nothing to re-decide)
+    assert all(not rows for name, rows in dcs[:2])
+    with pytest.raises(ValueError):
+        greedy_order_plan(pat, stat, pin=(pat.n + 3,))
+
+
+def test_trace_memo_lru_cap():
+    """Churning engine configs must not grow the memo past its cap."""
+    from repro.core.multipattern import BucketSpec, make_rulebook_plane
+
+    fleet.clear_trace_memo()
+    assert len(fleet._TRACE_MEMO) == 0
+    bspec = BucketSpec(n=2, has_neg=False, has_kleene=False, n_attrs=1)
+    cfg = CFG.engine()
+    for i in range(fleet._TRACE_MEMO_CAP + 24):
+        make_rulebook_plane(bspec, cfg, 1, False, laplace=2.0 + i)
+        assert len(fleet._TRACE_MEMO) <= fleet._TRACE_MEMO_CAP
+    assert len(fleet._TRACE_MEMO) == fleet._TRACE_MEMO_CAP
+    # a hit must not insert a second entry
+    size = len(fleet._TRACE_MEMO)
+    make_rulebook_plane(bspec, cfg, 1, False,
+                        laplace=2.0 + fleet._TRACE_MEMO_CAP + 23)
+    assert len(fleet._TRACE_MEMO) == size
+    fleet.clear_trace_memo()
+    assert len(fleet._TRACE_MEMO) == 0

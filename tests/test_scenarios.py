@@ -123,6 +123,35 @@ def test_scenario_drift_prefix_matches_oracle(name):
     assert tel.matches == _oracle_matches(sc, k, chunks=n)
 
 
+def test_flowsense_rulebook_replay_gates():
+    """The 3-rule tenant rulebook (alert + ack + fraud-combo) through
+    ``open_rulebook``: the control gate (zero replans under stationary
+    statistics) and the oracle differential both survive the move from
+    one Session to a stacked rulebook."""
+    from repro.cep.rulebook import open_rulebook
+    from repro.data.scenarios import flowsense
+
+    sc = scenarios.get("flowsense")
+    rules = flowsense.rulebook_patterns()
+    k = sc.partitions
+    warm = sc.segments[0].n_chunks
+    n = warm + 4
+    streams = [list(sc.stream(p, seed=0, chunks=n)) for p in range(k)]
+
+    rb = open_rulebook(rules, partitions=k, monitor=True,
+                       config=_config(sc))
+    rb.run([s[:warm] for s in streams])
+    tel_control = rb.run([s[warm:] for s in streams])
+    assert tel_control.replans == 0, (
+        "control segment must keep every (q, k) cell silent")
+    assert rb.telemetry().overflow == 0
+
+    for i, r in enumerate(rules):
+        want = np.array([RefEngine(r.build()).run(streams[p]).full_matches
+                         for p in range(k)], np.int64)
+        np.testing.assert_array_equal(rb.match_counts[i], want)
+
+
 def test_scenario_registry():
     assert set(scenarios.names()) == {"citibike", "flowsense", "fraud"}
     sc = scenarios.get("citibike")
