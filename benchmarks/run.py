@@ -10,76 +10,140 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
 
 
+def _headline_rows(d) -> list:
+    """Headline ``(metric, display, numeric|None)`` rows for one artifact.
+
+    Every field access is defensive: a harness that was interrupted (or an
+    older schema revision) may have written a partial document, and the
+    summary must still render the rows it *can* extract rather than
+    crashing the whole table on the first malformed artifact.
+    """
+    rows = []
+    if not isinstance(d, dict):
+        return [("(malformed artifact)", "-", None)]
+    schema = str(d.get("schema", "?"))
+    if schema.startswith("kernel_bench"):
+        best = {}
+        for r in d.get("rows", []) or []:
+            s = r.get("speedup_vs_baseline") if isinstance(r, dict) else None
+            if isinstance(s, (int, float)):
+                cfg = r.get("config", "?")
+                best[cfg] = max(best.get(cfg, 0.0), float(s))
+        for cfg, s in sorted(best.items()):
+            rows.append((f"{cfg} speedup vs baseline", f"{s:.2f}x", s))
+    elif schema.startswith("fleet_bench"):
+        by_k = {}
+        for r in d.get("rows", []) or []:
+            if isinstance(r, dict) and "k" in r:
+                by_k.setdefault(r["k"], {})[r.get("config")] = r
+        for k, cfgs in sorted(by_k.items()):
+            base = cfgs.get("baseline")
+            vm = cfgs.get("vmapped")
+            if base and vm and "seconds" in base and "seconds" in vm:
+                s = base["seconds"] / max(vm["seconds"], 1e-9)
+                rows.append((f"k={k} vmapped speedup", f"{s:.2f}x", s))
+        sc = d.get("superchunk") or {}
+        if sc:
+            for key, label in (("speedup_scanned", "superchunk"),
+                               ("speedup_sharded", "sharded")):
+                s = sc.get(key)
+                if isinstance(s, (int, float)):
+                    rows.append((f"k={sc.get('k')} {label} speedup",
+                                 f"{s:.2f}x", float(s)))
+    elif schema.startswith("scenarios"):
+        for name, s in sorted((d.get("scenarios") or {}).items()):
+            ev = s.get("events", "?") if isinstance(s, dict) else "?"
+            num = float(ev) if isinstance(ev, (int, float)) else None
+            rows.append((f"{name} events", str(ev), num))
+        rows.append(("all gates pass", str(d.get("all_gates_pass")), None))
+    elif schema.startswith("rulebook_bench"):
+        for s in d.get("summaries", []) or []:
+            if not isinstance(s, dict) or "q" not in s:
+                continue
+            q = s["q"]
+            sp = s.get("speedup")
+            if isinstance(sp, (int, float)):
+                rows.append((f"q={q} rulebook vs session loop",
+                             f"{sp:.2f}x", float(sp)))
+            sc = s.get("superchunk_speedup")
+            if isinstance(sc, (int, float)):
+                rows.append((f"q={q} superchunk vs per-chunk",
+                             f"{sc:.2f}x", float(sc)))
+            sh = s.get("sharing_ratio")
+            if isinstance(sh, (int, float)):
+                rows.append((f"q={q} sharing ratio", f"{sh:.2f}", float(sh)))
+        hot = d.get("hot_add") or {}
+        if ("hot_add_s" in hot) and ("cold_compile_s" in hot):
+            rows.append(("hot-add latency / cold compile",
+                         f"{hot['hot_add_s']:.2f}s/"
+                         f"{hot['cold_compile_s']:.1f}s", None))
+        if "retraces" in hot:
+            rows.append(("hot-add retraces", str(hot["retraces"]), None))
+    else:
+        rows.append((f"(unrecognized schema {schema})", "-", None))
+    return rows
+
+
+def _committed_artifact(fname: str, root: str):
+    """The HEAD-committed version of a BENCH file, or None if unreadable."""
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{fname}"], cwd=root,
+            capture_output=True, timeout=30)
+        if blob.returncode != 0:
+            return None
+        return json.loads(blob.stdout.decode("utf-8"))
+    except Exception:  # noqa: BLE001 - deltas are best-effort decoration
+        return None
+
+
 def summarize(root: str = ".") -> None:
-    """Aggregate every committed BENCH_*.json into one trajectory table.
+    """Aggregate every BENCH_*.json into one trajectory table.
 
     Each benchmark harness emits its own schema; this prints the headline
     rows of each so CI logs carry a single at-a-glance performance
     trajectory across kernel, fleet, scenario, and rulebook layers.
+    Missing, truncated, or partially-written artifacts degrade to warning
+    rows instead of aborting the table.  When a working-tree artifact
+    differs from its HEAD-committed version (i.e. this PR refreshed it),
+    a delta column shows the per-PR movement of each numeric metric.
     """
     files = sorted(f for f in os.listdir(root)
                    if f.startswith("BENCH_") and f.endswith(".json"))
     if not files:
         print("no BENCH_*.json artifacts found")
         return
-    print(f"{'artifact':<22} {'metric':<38} {'value':>12}")
-    print("-" * 74)
+    print(f"{'artifact':<22} {'metric':<38} {'value':>12} {'vs HEAD':>10}")
+    print("-" * 85)
 
-    def row(art, metric, value):
-        print(f"{art:<22} {metric:<38} {value:>12}")
+    def row(art, metric, value, delta=""):
+        print(f"{art:<22} {metric:<38} {value:>12} {delta:>10}")
 
     for fname in files:
-        with open(os.path.join(root, fname)) as fh:
-            d = json.load(fh)
-        schema = d.get("schema", "?")
         art = fname[len("BENCH_"):-len(".json")]
-        if schema.startswith("kernel_bench"):
-            best = {}
-            for r in d.get("rows", []):
-                if "speedup_vs_baseline" in r:
-                    best[r["config"]] = max(
-                        best.get(r["config"], 0.0),
-                        r["speedup_vs_baseline"])
-            for cfg, s in sorted(best.items()):
-                row(art, f"{cfg} speedup vs baseline", f"{s:.2f}x")
-        elif schema.startswith("fleet_bench"):
-            by_k = {}
-            for r in d.get("rows", []):
-                by_k.setdefault(r["k"], {})[r["config"]] = r
-            for k, cfgs in sorted(by_k.items()):
-                base = cfgs.get("baseline")
-                vm = cfgs.get("vmapped")
-                if base and vm:
-                    row(art, f"k={k} vmapped speedup",
-                        f"{base['seconds'] / max(vm['seconds'], 1e-9):.2f}x")
-            sc = d.get("superchunk", {})
-            if sc:
-                row(art, f"k={sc.get('k')} superchunk speedup",
-                    f"{sc.get('speedup_scanned', 0):.2f}x")
-                row(art, f"k={sc.get('k')} sharded speedup",
-                    f"{sc.get('speedup_sharded', 0):.2f}x")
-        elif schema.startswith("scenarios"):
-            for name, s in sorted(d.get("scenarios", {}).items()):
-                row(art, f"{name} events", s.get("events", "?"))
-            row(art, "all gates pass", str(d.get("all_gates_pass")))
-        elif schema.startswith("rulebook_bench"):
-            for s in d.get("summaries", []):
-                row(art, f"q={s['q']} rulebook vs session loop",
-                    f"{s['speedup']:.2f}x")
-                row(art, f"q={s['q']} sharing ratio",
-                    f"{s['sharing_ratio']:.2f}")
-            hot = d.get("hot_add") or {}
-            if hot:
-                row(art, "hot-add latency / cold compile",
-                    f"{hot['hot_add_s']:.2f}s/{hot['cold_compile_s']:.1f}s")
-                row(art, "hot-add retraces", hot["retraces"])
-        else:
-            row(art, f"(unrecognized schema {schema})", "-")
+        try:
+            with open(os.path.join(root, fname)) as fh:
+                d = json.load(fh)
+        except Exception as e:  # noqa: BLE001 - keep the table rendering
+            row(art, f"(unreadable: {type(e).__name__})", "-")
+            continue
+        prev = _committed_artifact(fname, root)
+        prev_num = {m: n for m, _, n in _headline_rows(prev)
+                    if n is not None} if prev is not None else {}
+        headline = _headline_rows(d) or [("(no headline metrics)", "-", None)]
+        for metric, display, num in headline:
+            delta = ""
+            if num is not None and metric in prev_num:
+                diff = num - prev_num[metric]
+                if abs(diff) >= 0.005:
+                    delta = f"{diff:+.2f}"
+            row(art, metric, display, delta)
 
 
 def main(argv=None) -> None:

@@ -76,6 +76,18 @@ class RuntimeConfig:
                cold-start set's exact sizes — exact for the greedy/order
                planner; pass explicit worst-case caps for tree plans.
     seed:      RNG seed for the host estimator's selectivity sampling.
+
+    Rulebook
+    --------
+    sharing:       multi-query join sharing across a bucket's rules —
+                   "lattice" (full interior sub-join sharing, arXiv
+                   1801.09413), "prefix" (opening two-position joins only,
+                   the PR 8 behavior) or "none".  Pure work elimination:
+                   counters are bit-identical across all three.
+    bucket_fusion: fuse same-arity buckets whose shapes differ only in
+                   negation/Kleene post-blocks into one superset bucket
+                   (fewer dispatches per tick; rules gate the blocks they
+                   do not use, so counters are unchanged).
     """
 
     # data plane
@@ -98,6 +110,9 @@ class RuntimeConfig:
     max_invariants: Optional[int] = None
     max_terms: Optional[int] = None
     seed: int = 0
+    # rulebook
+    sharing: str = "lattice"
+    bucket_fusion: bool = True
 
     def __post_init__(self):
         if self.match_capacity < self.buffer_capacity:
@@ -107,6 +122,34 @@ class RuntimeConfig:
         if self.policy not in (None, "static", "unconditional", "threshold",
                                "invariant"):
             raise ValueError(f"unknown policy {self.policy!r}")
+        if self.sharing not in ("lattice", "prefix", "none"):
+            raise ValueError(f"unknown sharing mode {self.sharing!r}")
+
+    # -- cross-field validation (one checkpoint for every runtime front) ----
+
+    def validate(self, *, monitor: bool, partitions: int) -> None:
+        """Checks that need context beyond the config's own fields.
+
+        ``Session`` and ``Rulebook`` both call this once at open time
+        instead of re-spelling the constraints ad hoc; keep any new
+        front's checks here so error messages stay uniform.
+        """
+        if partitions < 1:
+            raise ValueError("partitions must be >= 1")
+        if monitor and self.policy != "invariant":
+            raise ValueError(
+                "monitored runtimes verify invariants on device; "
+                f"config.policy must be 'invariant' (got {self.policy!r})")
+
+    def require_device_control(self, monitor: bool) -> None:
+        """Superchunk scans keep control on device between host syncs; a
+        host-side decision policy would need the per-chunk statistics sync
+        that superchunking exists to remove."""
+        if self.superchunk > 1 and not monitor:
+            raise ValueError(
+                "superchunk > 1 requires monitor=True: host decision "
+                "policies sync statistics every chunk, which defeats the "
+                "scanned plane (set monitor=True or superchunk=1)")
 
     # -- adapters to the internal structures --------------------------------
 

@@ -20,15 +20,32 @@ covers the rule set itself:
   bitmap and the host replans exactly the flagged cells (host work ∝
   violations, as in the single-pattern serving front), deploying the fresh
   plan + lowered invariant set as two row writes.
-* **common sub-joins run once.**  Rules whose cold plans open on the same
-  two-position sub-join (same positions, event types, window,
-  sequence-ness and pairwise predicate) form a prefix group: the shared
-  prefix join executes once per group and fans out to members
-  (``sharing_ratio()`` reports rules / groups).  Grouped rules keep their
-  leading two plan steps pinned (``greedy_order_plan(pin=...)``) so later
-  replans never break the share; hot-added rules always start their own
-  singleton group, since joining one retroactively would constrain plans
-  chosen before the rule existed.
+* **common sub-joins run once, at every depth.**  Rules whose cold plans
+  open on the same sub-join *chain* (same positions, event types, window,
+  sequence-ness and every live pairwise predicate, cumulatively per plan
+  step) share a node in the bucket's sub-join lattice (arXiv 1801.09413):
+  each shared node executes once per chunk and its partial-match set fans
+  out to every extension, down to the per-rule post-blocks
+  (``sharing_ratio()`` reports per-rule join steps / executed lattice
+  nodes).  Shared rules keep their common plan prefix pinned
+  (``greedy_order_plan(pin=...)``) so later replans never break the
+  share; hot-added rules always start their own singleton chain, since
+  joining a node retroactively would constrain plans chosen before the
+  rule existed.  ``config.sharing`` selects "lattice" (default),
+  "prefix" (opening joins only — the PR 8 behavior) or "none".
+* **small buckets fuse.**  With ``config.bucket_fusion`` (default), rules
+  of one arity share a single bucket even when only some carry negation /
+  Kleene post-blocks: the bucket's spec is the superset, per-rule
+  ``has_neg``/``has_kleene`` flags mask the blocks a rule lacks, and a
+  mixed-arity Q=32 rulebook steps in as many dispatches as *arities*, not
+  shape classes.
+* **superchunk scans.**  ``config.superchunk = S`` rolls S chunks per
+  bucket through one compiled ``lax.scan`` dispatch (``core.scan.
+  make_rulebook_scan``): counters and per-(q, k) invariant flags
+  accumulate on device and the host syncs once per window — or
+  immediately after a flag via the optimistic prefix re-run, so replans
+  still deploy on the very next chunk and counters stay bit-identical to
+  per-chunk stepping for every S.
 
 Counter semantics are the serving front's: immediate deployment, no
 migration split, exactly-once chunked counting — and per-rule counters are
@@ -53,7 +70,9 @@ from ..core.multipattern import (BucketSpec, RuleOps, ShareOps,
                                  init_rule_buffers, init_rule_monitor,
                                  lower_rule, make_rulebook_plane, pad_rule,
                                  stack_rule_ops)
-from ..core.patterns import CompositePattern, Pattern
+from ..core.patterns import PRED_NONE, CompositePattern, Pattern
+from ..core.scan import (first_event, make_rulebook_scan,
+                         stack_rulebook_window)
 from ..core.stats import Stat, uniform_stat
 from ..distributed.sharding import resolve_cep_mesh
 from .config import RuntimeConfig
@@ -63,22 +82,41 @@ from .session import Stream, Telemetry, _normalize_stream
 __all__ = ["Rulebook", "open_rulebook"]
 
 
-def _prefix_key(pattern: Pattern, order: Sequence[int]):
-    """Identity of a rule's leading two-position sub-join.
+def _subjoin_chain(pattern: Pattern,
+                   order: Sequence[int]) -> Tuple[tuple, ...]:
+    """Cumulative identity of a rule's sub-joins along one plan order.
 
-    Two rules with equal keys produce bit-identical partial-match sets
-    after plan step 1: the key pins the buffer contents (types), the
-    eviction horizon (window), every active constraint row of the first
-    packed join (window rows, sequence anchors via positions + is_seq,
-    and the single live predicate row (o0, o1)) and the positions the
-    values land in.  Inactive rows are PRED_NONE on both sides.
+    ``chain[d]`` identifies the ``d + 2``-position sub-join after plan
+    step ``d + 1``; two rules with equal ``chain[d]`` produce bit-identical
+    partial-match sets at that depth.  Each step key pins the buffer
+    contents (types), the eviction horizon (window), the sequence anchors
+    (positions + is_seq) and every live constraint row of the packed
+    join — at the step that joins position ``q``, the only active strip
+    rows are ``(a, q)`` for already-joined ``a`` (the rest are
+    ``PRED_NONE``, vacuous in the kernels) — plus the positions the
+    values land in.  Cumulative keys make sharing prefix-closed: equal at
+    depth d implies equal at every shallower depth.
     """
     spec = make_spec(pattern)
-    o0, o1 = int(order[0]), int(order[1])
-    return (o0, o1, spec.type_ids[o0], spec.type_ids[o1],
-            float(spec.window), bool(spec.is_seq),
-            int(spec.op_t[o0, o1]), int(spec.a_attr_t[o0, o1]),
-            int(spec.b_attr_t[o0, o1]), float(spec.theta_t[o0, o1]))
+    member = [int(order[0])]
+    key = (float(spec.window), bool(spec.is_seq), int(order[0]),
+           int(spec.type_ids[int(order[0])]))
+    chain = []
+    for i in range(1, spec.n):
+        q = int(order[i])
+        rows = []
+        for a in sorted(member):
+            op = int(spec.op_t[a, q])
+            if op == PRED_NONE:
+                rows.append((a, op, 0, 0, 0.0))
+            else:
+                rows.append((a, op, int(spec.a_attr_t[a, q]),
+                             int(spec.b_attr_t[a, q]),
+                             float(spec.theta_t[a, q])))
+        key = key + (q, int(spec.type_ids[q]), tuple(rows))
+        chain.append(key)
+        member.append(q)
+    return tuple(chain)
 
 
 class _Lowered2D:
@@ -137,9 +175,9 @@ class _RuleEntry:
     rid: int
     pattern: Pattern
     bucket: "_Bucket"
-    slot: int               # q row in the bucket (fixed while active)
-    group: int              # u slot of its prefix group
-    pinned: Tuple[int, ...]  # () or the pinned 2-step prefix
+    slot: int                # q row in the bucket (fixed while active)
+    chain: Tuple[int, ...]   # lattice class per depth (len = n - 1)
+    pinned: Tuple[int, ...]  # () or the pinned shared plan prefix
     active: bool = True
     matches: np.ndarray = None       # (K,) int64
     overflow: int = 0
@@ -158,18 +196,21 @@ class _Bucket:
     def __init__(self, rb: "Rulebook", bspec: BucketSpec):
         self.rb = rb
         self.bspec = bspec
+        self.depth = bspec.n - 1            # lattice depths (>= 1)
         self.q_cap = 0
-        self.u_cap = 0
+        self.u_caps: List[int] = []         # class capacity per depth
         self.slots: List[Optional[_RuleEntry]] = []
-        self.group_members: List[List[int]] = []  # u -> member slots
+        # [d][u] -> member slots of the depth-d class u
+        self.class_members: List[List[List[int]]] = []
         self.free_slots: List[int] = []
-        self.free_groups: List[int] = []
+        self.free_classes: List[List[int]] = []     # per depth
         # Host mirrors (device copies are patched in lockstep).
         self.ops_h: Optional[RuleOps] = None
         self.ops_d: Optional[RuleOps] = None
         self.plans_h: Optional[np.ndarray] = None   # (K, Qb, n) i32
         self.plans_d = None
-        self.rep_h: Optional[np.ndarray] = None     # (U,) i32
+        self.rep_h: List[np.ndarray] = []           # [d]: (U_d,) i32
+        self.parent_h: List[np.ndarray] = []        # [d]: (U_d,) i32
         self.expand_h: Optional[np.ndarray] = None  # (Qb,) i32
         self.share_d: Optional[ShareOps] = None
         self.state = None
@@ -178,13 +219,15 @@ class _Bucket:
         self.policies: List[List] = []              # [k][q] -> policy
         self.caps: Tuple[int, int] = (1, 1)
         self.plane = None
+        self.scan_plane = None              # built lazily on first scan
 
     # -- layout ------------------------------------------------------------
 
     def _refresh_share(self) -> None:
         self.share_d = ShareOps(
-            rep_idx=jnp.asarray(self.rep_h, jnp.int32),
-            expand_idx=jnp.asarray(self.expand_h, jnp.int32))
+            rep=tuple(jnp.asarray(r, jnp.int32) for r in self.rep_h),
+            parent=tuple(jnp.asarray(p, jnp.int32) for p in self.parent_h),
+            expand=jnp.asarray(self.expand_h, jnp.int32))
 
     def _make_plane(self) -> None:
         rb = self.rb
@@ -192,27 +235,42 @@ class _Bucket:
             self.bspec, rb.engine_cfg, rb.k, rb.monitored,
             laplace=rb.config.laplace, mesh=rb.mesh)
 
+    def scan_plane_ref(self):
+        """The scanned plane, built on first superchunk dispatch (shares
+        the per-chunk plane's trace-memo discipline: keyed sans capacity,
+        growth re-enters the same callable)."""
+        if self.scan_plane is None:
+            rb = self.rb
+            self.scan_plane = make_rulebook_scan(
+                self.bspec, rb.engine_cfg, rb.k, rb.monitored,
+                laplace=rb.config.laplace, mesh=rb.mesh)
+        return self.scan_plane
+
     def build(self, entries: Sequence[Tuple[_RuleEntry, RuleOps,
                                             np.ndarray, list, object]],
               spare: int,
               probe_patterns: Optional[Sequence[Pattern]] = None) -> None:
         """Initial layout from (entry, ops_row, order, dcs, stat) tuples.
 
-        Entries arrive pre-grouped (``entry.group`` / ``entry.slot`` set);
-        ``spare`` free rule slots and group slots are pre-provisioned so
-        the first hot-adds are pure row writes.  ``probe_patterns`` seeds
-        the invariant-cap probe when the bucket opens empty (hot-add into
-        a new shape) — the incoming rule must fit the caps.
+        Entries arrive pre-grouped (``entry.chain`` / ``entry.slot`` set);
+        ``spare`` free rule slots and per-depth class slots are
+        pre-provisioned so the first hot-adds are pure row writes.
+        ``probe_patterns`` seeds the invariant-cap probe when the bucket
+        opens empty (hot-add into a new shape) — the incoming rule must
+        fit the caps.
         """
         rb = self.rb
         n_rules = len(entries)
-        n_groups = 1 + max((e.group for e, *_ in entries), default=-1)
+        n_classes = [1 + max((e.chain[d] for e, *_ in entries), default=-1)
+                     for d in range(self.depth)]
         self.q_cap = n_rules + spare
-        self.u_cap = n_groups + spare
+        self.u_caps = [max(1, nc + spare) for nc in n_classes]
         rows = [None] * self.q_cap
         self.slots = [None] * self.q_cap
-        self.group_members = [[] for _ in range(self.u_cap)]
-        self.rep_h = np.zeros((self.u_cap,), np.int32)
+        self.class_members = [[[] for _ in range(uc)] for uc in self.u_caps]
+        self.free_classes = [[] for _ in range(self.depth)]
+        self.rep_h = [np.zeros((uc,), np.int32) for uc in self.u_caps]
+        self.parent_h = [np.zeros((uc,), np.int32) for uc in self.u_caps]
         self.expand_h = np.zeros((self.q_cap,), np.int32)
         self.plans_h = np.tile(np.arange(self.bspec.n, dtype=np.int32),
                                (rb.k, self.q_cap, 1))
@@ -224,11 +282,14 @@ class _Bucket:
         low_rows: List[List[LoweredInvariants]] = [
             [None] * self.q_cap for _ in range(rb.k)]
         for entry, ops_row, order, dcs, stat in entries:
-            q, u = entry.slot, entry.group
+            q = entry.slot
             rows[q] = ops_row
             self.slots[q] = entry
-            self.group_members[u].append(q)
-            self.expand_h[q] = u
+            for d, u in enumerate(entry.chain):
+                self.class_members[d][u].append(q)
+                if d:
+                    self.parent_h[d][u] = entry.chain[d - 1]
+            self.expand_h[q] = entry.chain[-1]
             self.plans_h[:, q] = order
             if rb.monitored:
                 for k in range(rb.k):
@@ -239,15 +300,16 @@ class _Bucket:
                     low_rows[k][q] = pol.compile(
                         self.bspec.n, max_inv=self.caps[0],
                         max_terms=self.caps[1])
-        for u, members in enumerate(self.group_members):
-            self.rep_h[u] = members[0] if members else 0
+        for d in range(self.depth):
+            for u, members in enumerate(self.class_members[d]):
+                if members:
+                    self.rep_h[d][u] = members[0]
+                else:
+                    self.free_classes[d].append(u)
         for q in range(self.q_cap):
             if rows[q] is None:
                 rows[q] = pad_rule(self.bspec)
                 self.free_slots.append(q)
-        for u in range(self.u_cap):
-            if not self.group_members[u]:
-                self.free_groups.append(u)
         if rb.monitored:
             empty = self._empty_lowered()
             for k in range(rb.k):
@@ -339,14 +401,19 @@ class _Bucket:
         self.free_slots.extend(range(old, new))
         self.q_cap = new
 
-    def grow_groups(self) -> None:
-        old, new = self.u_cap, max(1, self.u_cap * 2)
-        self.rep_h = np.concatenate(
-            [self.rep_h, np.zeros((new - old,), np.int32)])
-        self.group_members.extend([] for _ in range(new - old))
-        self.free_groups.extend(range(old, new))
+    def grow_classes(self, d: int) -> None:
+        """Double depth ``d``'s class capacity.  Like ``grow_slots`` this
+        changes the plane's shape signature — the next dispatch is the
+        sanctioned retrace of the same memoized callable."""
+        old, new = self.u_caps[d], max(1, self.u_caps[d] * 2)
+        self.rep_h[d] = np.concatenate(
+            [self.rep_h[d], np.zeros((new - old,), np.int32)])
+        self.parent_h[d] = np.concatenate(
+            [self.parent_h[d], np.zeros((new - old,), np.int32)])
+        self.class_members[d].extend([] for _ in range(new - old))
+        self.free_classes[d].extend(range(old, new))
         self._refresh_share()
-        self.u_cap = new
+        self.u_caps[d] = new
 
     # -- row writes --------------------------------------------------------
 
@@ -401,19 +468,14 @@ class Rulebook:
                  monitor: bool = True,
                  config: Optional[RuntimeConfig] = None,
                  spare_slots: int = 0):
-        if partitions < 1:
-            raise ValueError("partitions must be >= 1")
         self.config = config or RuntimeConfig()
-        if self.config.superchunk > 1:
-            raise ValueError("rulebooks step per chunk; superchunk > 1 is "
-                             "not supported yet")
+        # One central checkpoint (superchunk needs no monitor here: the
+        # rulebook's only per-chunk control is the invariant flag, which
+        # the scanned plane carries on device).
+        self.config.validate(monitor=bool(monitor),
+                             partitions=int(partitions))
         self.k = int(partitions)
         self.monitored = bool(monitor)
-        if self.monitored and self.config.policy != "invariant":
-            raise ValueError(
-                "monitored rulebooks verify lowered invariant sets on "
-                "device; config.policy must be 'invariant' "
-                f"(got {self.config.policy!r})")
         self.engine_cfg: EngineConfig = self.config.engine()
         self.mesh = resolve_cep_mesh(self.config.mesh, self.k)
         self.spare_slots = int(spare_slots)
@@ -458,33 +520,63 @@ class Rulebook:
         by_shape: Dict[tuple, List[Tuple[int, Pattern]]] = {}
         for idx, p in enumerate(patterns):
             n, has_neg, has_kl, _ = self._bucket_key(p)
-            by_shape.setdefault((n, has_neg, has_kl), []).append((idx, p))
+            # Fused: one bucket per arity, spec'd to the superset of its
+            # members' post-blocks (per-rule has_neg/has_kleene flags mask
+            # the rest).  Unfused: one bucket per exact shape class.
+            fkey = ((n,) if self.config.bucket_fusion
+                    else (n, has_neg, has_kl))
+            by_shape.setdefault(fkey, []).append((idx, p))
         stat0_cache: Dict[int, Stat] = {}
-        for (n, has_neg, has_kl), ps in by_shape.items():
-            neg_cap = max((len(make_spec(p).neg_rows) for _, p in ps),
-                          default=0)
-            bspec = BucketSpec(n=n, has_neg=has_neg, has_kleene=has_kl,
-                               n_attrs=self.n_attrs, neg_rows_cap=neg_cap)
+        mode = self.config.sharing
+        for fkey, ps in by_shape.items():
+            n = fkey[0]
+            specs = [make_spec(p) for _, p in ps]
+            bspec = BucketSpec(
+                n=n,
+                has_neg=any(s.has_neg for s in specs),
+                has_kleene=any(s.kleene_pos is not None for s in specs),
+                n_attrs=self.n_attrs,
+                neg_rows_cap=max(len(s.neg_rows) for s in specs))
             bucket = _Bucket(self, bspec)
             stat0 = stat0_cache.setdefault(n, uniform_stat(n))
-            # Cold-plan free, then group by the leading sub-join.
+            # Cold-plan free, then build the sharing lattice from the
+            # cumulative sub-join chains along each free plan.
             cold = [greedy_order_plan(p, stat0) for _, p in ps]
-            groups: Dict[tuple, int] = {}
-            assignments = []
-            for (_, p), (plan, _) in zip(ps, cold):
-                key = _prefix_key(p, plan.order)
-                assignments.append(groups.setdefault(key, len(groups)))
-            group_sizes = np.bincount(assignments, minlength=len(groups))
+            depth = n - 1
+            class_maps: List[Dict[tuple, int]] = [{} for _ in range(depth)]
+            assign = []
+            for r, ((_, p), (plan, _)) in enumerate(zip(ps, cold)):
+                ck = _subjoin_chain(p, plan.order)
+                row = []
+                for d in range(depth):
+                    if mode == "none" or (mode == "prefix" and d > 0):
+                        key = ("solo", r, d)
+                    else:
+                        key = ck[d]
+                    row.append(class_maps[d].setdefault(
+                        key, len(class_maps[d])))
+                assign.append(tuple(row))
+            sizes = [np.bincount([a[d] for a in assign],
+                                 minlength=len(class_maps[d]))
+                     for d in range(depth)]
             entries = []
-            for slot, ((idx, p), (plan, dcs), u) in enumerate(
-                    zip(ps, cold, assignments)):
+            for slot, ((idx, p), (plan, dcs)) in enumerate(zip(ps, cold)):
+                # Deepest depth actually shared (>= 2 members); cumulative
+                # keys make this a plan prefix, which gets pinned so later
+                # replans never break the share.
+                shared = -1
+                for d in range(depth):
+                    if sizes[d][assign[slot][d]] >= 2:
+                        shared = d
+                    else:
+                        break
                 pinned: Tuple[int, ...] = ()
-                if group_sizes[u] >= 2:
-                    pinned = tuple(int(o) for o in plan.order[:2])
+                if shared >= 0:
+                    pinned = tuple(int(o) for o in plan.order[:shared + 2])
                     plan, dcs = greedy_order_plan(p, stat0, pin=pinned)
                 entry = _RuleEntry(
                     rid=base + idx, pattern=p, bucket=bucket,
-                    slot=slot, group=u, pinned=pinned,
+                    slot=slot, chain=assign[slot], pinned=pinned,
                     matches=np.zeros((self.k,), np.int64))
                 self._rules[base + idx] = entry
                 entries.append((entry, lower_rule(p, bspec),
@@ -494,6 +586,18 @@ class Rulebook:
             self._buckets.append(bucket)
 
     # -- data plane ---------------------------------------------------------
+
+    def _check_chunk(self, chunk: Chunk) -> Chunk:
+        if chunk.type_id.ndim == 1:
+            if self.k != 1:
+                raise ValueError("unstacked chunk on a multi-partition "
+                                 "rulebook; stack K per-partition chunks")
+            chunk = stack_chunks([chunk])
+        if chunk.attr.shape[-1] != self.n_attrs:
+            raise ValueError(
+                f"chunk has {chunk.attr.shape[-1]} attributes; this "
+                f"rulebook is compiled for {self.n_attrs}")
+        return chunk
 
     def step(self, chunk: Chunk, t0: float, t1: float) -> np.ndarray:
         """Advance every rule one tick over an already-stacked chunk.
@@ -505,15 +609,7 @@ class Rulebook:
         violation → sync → replan → row-deploy loop per flagged (q, k)
         cell inside the call.
         """
-        if chunk.type_id.ndim == 1:
-            if self.k != 1:
-                raise ValueError("unstacked chunk on a multi-partition "
-                                 "rulebook; stack K per-partition chunks")
-            chunk = stack_chunks([chunk])
-        if chunk.attr.shape[-1] != self.n_attrs:
-            raise ValueError(
-                f"chunk has {chunk.attr.shape[-1]} attributes; this "
-                f"rulebook is compiled for {self.n_attrs}")
+        chunk = self._check_chunk(chunk)
         t0j, t1j = jnp.float32(t0), jnp.float32(t1)
         self._chunks += 1
         out = np.zeros((len(self._rules), self.k), np.int64)
@@ -581,14 +677,136 @@ class Rulebook:
         if changed:
             entry.deployments += 1
 
+    def step_superchunk(self, chunks: Sequence[Chunk],
+                        edges: Sequence[Tuple[float, float]]) -> np.ndarray:
+        """Advance every rule over a sequence of stacked chunks with
+        ``config.superchunk`` chunks per compiled ``lax.scan`` dispatch.
+
+        Bit-identical to looping :meth:`step`: the scanned plane carries
+        (Buffers, MonitorState) per bucket, counters and per-(q, k)
+        invariant flags accumulate on device, and a flag at in-window
+        chunk ``f`` triggers the optimistic prefix re-run — the window's
+        first ``f + 1`` chunks are re-committed from the saved pre-window
+        state (deterministic, so bitwise equal), the flagged cells replan,
+        and the next window resumes at ``f + 1`` — so replans still
+        deploy on the very next chunk.  Buckets hold disjoint state, so
+        scanning them window-by-window commutes with the per-chunk
+        bucket interleave.  Returns the per-chunk ``(len(chunks), R, K)``
+        full-match counts over rules in insertion order.
+        """
+        chunks = [self._check_chunk(c) for c in chunks]
+        t0s = [float(t0) for t0, _ in edges]
+        t1s = [float(t1) for _, t1 in edges]
+        if len(chunks) != len(t0s):
+            raise ValueError("chunks and edges length mismatch")
+        s_cap = max(2, self.config.superchunk)
+        n_chunks = len(chunks)
+        out = np.zeros((n_chunks, len(self._rules), self.k), np.int64)
+        # Buckets walk the same window boundaries until a flag splits one;
+        # cache the stacked xs per (i, j) range so the common aligned case
+        # stacks each window once, not once per bucket.
+        xs_cache: Dict[Tuple[int, int], object] = {}
+        for bucket in self._buckets:
+            i = 0
+            while i < n_chunks:
+                j = min(i + s_cap, n_chunks)
+                xs = xs_cache.get((i, j))
+                if xs is None:
+                    xs = stack_rulebook_window(
+                        chunks[i:j], t0s[i:j], t1s[i:j], s_cap)
+                    xs_cache[(i, j)] = xs
+                accept = self._scan_window(bucket, xs, j - i, out, i)
+                i += accept
+        self._chunks += n_chunks
+        return out
+
+    def _scan_window(self, bucket: _Bucket, xs, n_en: int,
+                     out: np.ndarray, base: int) -> int:
+        """One optimistic scan dispatch over a pre-stacked window of one
+        bucket (``n_en`` of the window's padded rows are enabled).
+
+        Commits the accepted prefix (state, counters, ``out`` rows) and
+        applies invariant replans for flags at the last accepted chunk;
+        returns the number of chunks accepted (>= 1).
+        """
+        plane = bucket.scan_plane_ref()
+        state0, mon0 = bucket.state, bucket.monitor
+        lowered = bucket.lowered.device() if self.monitored else None
+
+        def dispatch(xs):
+            return plane.fn(state0, mon0, bucket.ops_device(),
+                            bucket.share_d, bucket.plans_device(),
+                            lowered, xs)
+
+        state, monitor, ys = dispatch(xs)
+        full_h, pm_h, ov_h, cl_h, ng_h, vio_h = jax.device_get(
+            (ys.full, ys.pm, ys.overflow, ys.closure, ys.neg,
+             ys.violated))
+        self._host_syncs += 1
+        f = (first_event(vio_h, ov_h, n_en, escalate=False)
+             if self.monitored else None)
+        if f is not None and f < n_en - 1:
+            # Re-run the prefix [0..f] from the saved pre-window state;
+            # deterministic compute makes the accepted rows bitwise
+            # identical to the optimistic pass.
+            en = np.zeros(int(xs.enabled.shape[0]), bool)
+            en[:f + 1] = True
+            state, monitor, ys = dispatch(
+                xs._replace(enabled=jnp.asarray(en)))
+            full_h, pm_h, ov_h, cl_h, ng_h, vio_h = jax.device_get(
+                (ys.full, ys.pm, ys.overflow, ys.closure, ys.neg,
+                 ys.violated))
+            self._host_syncs += 1
+        accept = n_en if f is None else f + 1
+        bucket.state, bucket.monitor = state, monitor
+        for q, entry in enumerate(bucket.slots):
+            if entry is None or not entry.active:
+                continue
+            full_k = full_h[:accept, :, q].astype(np.int64)
+            entry.matches += full_k.sum(axis=0)
+            entry.pm_created += int(pm_h[:accept, :, q].sum())
+            entry.overflow += int(ov_h[:accept, :, q].sum())
+            entry.closure_expansions += int(cl_h[:accept, :, q].sum())
+            entry.neg_rejected += int(ng_h[:accept, :, q].sum())
+            entry.chunks += accept
+            out[base:base + accept, entry.rid] += full_k
+        if f is not None:
+            last = accept - 1
+            fired = np.nonzero(vio_h[last])
+            if fired[0].size:
+                # One coalesced stats transfer serves every fired cell.
+                self._host_syncs += 1
+                rates_h = np.asarray(
+                    jax.device_get(ys.rates[last]), np.float64)
+                sel_h = np.asarray(jax.device_get(ys.sel[last]), np.float64)
+                for k, q in zip(*fired):
+                    self._replan_cell(bucket, int(k), int(q),
+                                      rates_h, sel_h)
+        return accept
+
     def run(self, stream: Stream) -> Telemetry:
         """Consume a chunk stream (any shape ``cep.Session.run`` accepts)
         and return this run's aggregate ``Telemetry``.  Stream state
         persists across calls, so feeding a stream in segments is
-        equivalent to one continuous run."""
+        equivalent to one continuous run.  With ``config.superchunk > 1``
+        chunks are windowed through :meth:`step_superchunk` (bit-identical,
+        one host sync per window instead of per chunk)."""
         before = self.telemetry()
-        for fc in _normalize_stream(stream, self.k):
-            self.step(fc.chunk, fc.t0, fc.t1)
+        s_cap = self.config.superchunk
+        if s_cap > 1:
+            win: List[Chunk] = []
+            edges: List[Tuple[float, float]] = []
+            for fc in _normalize_stream(stream, self.k):
+                win.append(fc.chunk)
+                edges.append((fc.t0, fc.t1))
+                if len(win) == s_cap:
+                    self.step_superchunk(win, edges)
+                    win, edges = [], []
+            if win:
+                self.step_superchunk(win, edges)
+        else:
+            for fc in _normalize_stream(stream, self.k):
+                self.step(fc.chunk, fc.t0, fc.t1)
         after = self.telemetry()
         delta = Telemetry(partitions=self.k)
         for f in ("chunks", "matches", "replans", "deployments",
@@ -613,17 +831,27 @@ class Rulebook:
         asserted by ``trace_count()`` staying flat); growing a full
         bucket's capacity, or opening a bucket for a shape the rulebook
         has never seen, is the documented retrace/compile point.  The new
-        rule always starts its own prefix group.
+        rule always starts its own singleton lattice chain.
         """
         p = self._widen(self._check_pattern(as_pattern(rule)))
         n, has_neg, has_kl, neg_rows = self._bucket_key(p)
         bucket = None
         for b in self._buckets:
-            if (b.bspec.n, b.bspec.has_neg, b.bspec.has_kleene) == \
-                    (n, has_neg, has_kl) and \
-                    neg_rows <= b.bspec.neg_rows_cap:
-                bucket = b
-                break
+            # Coverage, not equality: a fused bucket's spec is a superset
+            # its members gate per rule.  Without fusion, require the
+            # exact shape class (keeps dispatch cost predictable).
+            if b.bspec.n != n or neg_rows > b.bspec.neg_rows_cap:
+                continue
+            if has_neg and not b.bspec.has_neg:
+                continue
+            if has_kl and not b.bspec.has_kleene:
+                continue
+            if not self.config.bucket_fusion and \
+                    (b.bspec.has_neg, b.bspec.has_kleene) != \
+                    (has_neg, has_kl):
+                continue
+            bucket = b
+            break
         if bucket is None:
             bucket = _Bucket(self, BucketSpec(
                 n=n, has_neg=has_neg, has_kleene=has_kl,
@@ -633,21 +861,25 @@ class Rulebook:
             self._buckets.append(bucket)
         if not bucket.free_slots:
             bucket.grow_slots()
-        if not bucket.free_groups:
-            bucket.grow_groups()
+        for d in range(bucket.depth):
+            if not bucket.free_classes[d]:
+                bucket.grow_classes(d)
         q = bucket.free_slots.pop(0)
-        u = bucket.free_groups.pop(0)
+        chain = tuple(bucket.free_classes[d].pop(0)
+                      for d in range(bucket.depth))
         stat0 = uniform_stat(n)
         plan, dcs = greedy_order_plan(p, stat0)
         order = np.asarray(plan.order, np.int32)
         entry = _RuleEntry(
             rid=len(self._rules), pattern=p, bucket=bucket, slot=q,
-            group=u, pinned=(), matches=np.zeros((self.k,), np.int64))
+            chain=chain, pinned=(), matches=np.zeros((self.k,), np.int64))
         self._rules.append(entry)
         bucket.slots[q] = entry
-        bucket.group_members[u] = [q]
-        bucket.rep_h[u] = q
-        bucket.expand_h[q] = u
+        for d, u in enumerate(chain):
+            bucket.class_members[d][u] = [q]
+            bucket.rep_h[d][u] = q
+            bucket.parent_h[d][u] = chain[d - 1] if d else 0
+        bucket.expand_h[q] = chain[-1]
         bucket._refresh_share()
         bucket.zero_state_row(q)
         bucket.write_ops_row(q, lower_rule(p, bucket.bspec))
@@ -668,20 +900,24 @@ class Rulebook:
         entry = self._entry(rid)
         if not entry.active:
             raise ValueError(f"rule {rid} already removed")
-        bucket, q, u = entry.bucket, entry.slot, entry.group
+        bucket, q = entry.bucket, entry.slot
         entry.active = False
         pad = pad_rule(bucket.bspec)
         bucket.write_ops_row(q, pad)
         bucket.slots[q] = None
         bucket.free_slots.append(q)
-        members = bucket.group_members[u]
-        members.remove(q)
-        if not members:
-            bucket.free_groups.append(u)
-        elif int(bucket.rep_h[u]) == q:
-            # Any member can represent the group: the prefix key pins
-            # every operand of the shared first join step.
-            bucket.rep_h[u] = members[0]
+        reroute = False
+        for d, u in enumerate(entry.chain):
+            members = bucket.class_members[d][u]
+            members.remove(q)
+            if not members:
+                bucket.free_classes[d].append(u)
+            elif int(bucket.rep_h[d][u]) == q:
+                # Any member can represent the class: the chain key pins
+                # every operand of the shared join steps.
+                bucket.rep_h[d][u] = members[0]
+                reroute = True
+        if reroute:
             bucket._refresh_share()
         if self.monitored:
             for k in range(self.k):
@@ -707,15 +943,31 @@ class Rulebook:
         return np.stack([e.matches for e in self._rules])
 
     def sharing_ratio(self) -> float:
-        """Active rules per active prefix group (1.0 = no sharing)."""
-        n_rules = sum(1 for e in self._rules if e.active)
-        n_groups = sum(1 for b in self._buckets
-                       for m in b.group_members if m)
-        return n_rules / max(n_groups, 1)
+        """Join work avoided by the sub-join lattice: per-rule plan steps
+        over executed lattice node evaluations per chunk (1.0 = no
+        sharing; opening-prefix-only sharing tops out just above 1 on
+        deep rules, the full lattice keeps climbing with shared depth)."""
+        steps = nodes = 0
+        for b in self._buckets:
+            n_active = sum(1 for e in b.slots
+                           if e is not None and e.active)
+            steps += n_active * b.depth
+            for d in range(b.depth):
+                nodes += sum(1 for m in b.class_members[d] if m)
+        return steps / max(nodes, 1)
 
     def trace_count(self) -> int:
-        """Total plane (re)traces — the hot-add zero-recompile probe."""
-        return sum(b.plane.traces for b in self._buckets)
+        """Total plane (re)traces — the hot-add zero-recompile probe.
+        Counts the per-chunk and scanned planes alike."""
+        return sum(b.plane.traces +
+                   (b.scan_plane.traces if b.scan_plane is not None else 0)
+                   for b in self._buckets)
+
+    @property
+    def n_buckets(self) -> int:
+        """Compiled dispatches per tick (fusion folds shape classes of one
+        arity into a single bucket)."""
+        return len(self._buckets)
 
     def telemetry(self, rule: Optional[int] = None) -> Telemetry:
         """Cumulative telemetry, aggregate or for one rule id."""
@@ -770,9 +1022,13 @@ def open_rulebook(rules: Iterable, *, partitions: int = 1,
                  plane shards over ``config.mesh`` when set.
     monitor:     fuse statistics rings + per-(q, k) invariant verification
                  into the plane; ``False`` runs static cold plans.
-    config:      a :class:`RuntimeConfig` (``superchunk`` must stay 1).
-    spare_slots: pre-provisioned free rule/group slots per bucket so that
-                 many hot-adds are pure row writes (zero retraces).
+    config:      a :class:`RuntimeConfig`; ``superchunk = S`` scans S
+                 chunks per compiled dispatch (``run`` windows the stream,
+                 ``step_superchunk`` takes explicit windows), ``sharing``
+                 and ``bucket_fusion`` tune the multi-query optimizer.
+    spare_slots: pre-provisioned free rule/lattice-class slots per bucket
+                 so that many hot-adds are pure row writes (zero
+                 retraces).
     """
     return Rulebook(list(rules), partitions=partitions, monitor=monitor,
                     config=config, spare_slots=spare_slots)

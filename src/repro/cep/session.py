@@ -220,16 +220,11 @@ class Session:
     def __init__(self, pattern, *, partitions: int = 1, plan: str = "auto",
                  monitor: bool = False,
                  config: Optional[RuntimeConfig] = None):
-        if partitions < 1:
-            raise ValueError("partitions must be >= 1")
         self.config = config or RuntimeConfig()
+        self.config.validate(monitor=bool(monitor),
+                             partitions=int(partitions))
         self.k = int(partitions)
         self.monitor = bool(monitor)
-        if self.monitor and self.config.policy != "invariant":
-            raise ValueError(
-                "monitored sessions verify lowered invariant sets on "
-                "device; config.policy must be 'invariant' "
-                f"(got {self.config.policy!r})")
         self.pattern = as_pattern(pattern)
         self._tel = Telemetry(partitions=self.k)
         if isinstance(self.pattern, CompositePattern):
@@ -274,15 +269,7 @@ class Session:
                     self.pattern, self.k, max_inv=cfg.max_invariants,
                     max_terms=cfg.max_terms, superchunk=cfg.superchunk,
                     **common)
-            if cfg.superchunk > 1:
-                # The host decision policy estimates statistics every
-                # chunk — the exact O(K·stats) host loop superchunking
-                # exists to remove.  Device-resident monitoring is the
-                # scan-compatible control plane.
-                raise ValueError(
-                    "superchunk > 1 on the adaptive batch plane requires "
-                    "monitor=True (host policies sync statistics per "
-                    "chunk)")
+            cfg.require_device_control(self.monitor)
             return FleetRunner(self.pattern, self.k,
                                sel_samples=cfg.sel_samples, **common)
 

@@ -35,12 +35,19 @@ def greedy_order_plan(
     """Run Algorithm 2 and capture per-block deciding condition sets.
 
     ``pin`` forces the first ``len(pin)`` plan steps to the given
-    positions regardless of statistics (used by the rulebook's prefix
-    sharing, which must keep every member of a shared group on the same
-    leading sub-join).  Pinned steps are decided by fiat, not by argmin
-    comparisons, so they contribute empty deciding-condition sets — the
-    invariant machinery simply has nothing to verify for them.
+    positions regardless of statistics.  The rulebook's sharing lattice
+    uses pins of arbitrary depth: a rule whose deepest shared sub-join
+    sits at lattice depth ``d`` is planned with ``pin`` equal to the
+    class representative's first ``d + 2`` order positions, so every
+    member of a shared class walks the identical interior sub-join
+    chain and only the *unshared* suffix is chosen by statistics.
+    Pinned steps are decided by fiat, not by argmin comparisons, so
+    they contribute empty deciding-condition sets — the invariant
+    machinery simply has nothing to verify for them.
     """
+    if len(pin) > pattern.n:
+        raise ValueError(f"pin of length {len(pin)} exceeds pattern "
+                         f"arity {pattern.n}")
     n = pattern.n
     sel_pairs = frozenset(
         {(p, q) for p, q in pattern.selectivity_pairs()}

@@ -19,15 +19,22 @@ axis this yields the Q×K rulebook plane:
   the attribute width, and the negation-predicate row capacity.  Rules are
   bucketed by this spec; buckets are padded with inert rows
   (:func:`pad_rule`) whose joins are empty by construction.
-* **Prefix sharing** (multi-query optimization in the spirit of Kolchinsky
-  & Schuster's join-query-sharing work): rules whose first plan step is the
-  identical sub-join — same two positions, types, window, sequence-ness and
-  pairwise predicate — are grouped at compile time; the shared two-position
-  prefix join runs once per *group* (``ShareOps.rep_idx`` gathers the U
-  group representatives) and its partial-match set fans out to every member
-  (``ShareOps.expand_idx``) before the per-rule suffix steps.  Sound
-  because a prefix ``MatchSet`` stores event *values*, not buffer indices,
-  and the group key pins every operand of the shared step.
+* **Sub-join sharing lattice** (multi-query optimization after Kolchinsky
+  & Schuster's join-query-sharing work, arXiv 1801.09413): rules whose
+  plans open with the identical sub-join *chain* — same positions, types,
+  window, sequence-ness and every pairwise predicate live at each step —
+  are grouped per *depth* at compile time.  Depth ``d`` covers the
+  ``d + 2``-position sub-join after plan step ``d + 1``; ``ShareOps.rep[d]``
+  gathers the rule slot whose operands drive each depth-``d`` equivalence
+  class, ``ShareOps.parent[d]`` chains each class to the depth-``d-1``
+  class it extends, and ``ShareOps.expand`` fans the final-depth partial
+  match sets out to every rule for the per-rule post-blocks.  Each shared
+  sub-join therefore runs **once per class per step** instead of once per
+  rule; the opening-prefix grouping of PR 8 is the ``d = 0`` slice of this
+  lattice.  Sound because a ``MatchSet`` stores event *values*, not buffer
+  indices, and the class key pins every operand of the shared steps (only
+  strip rows whose right operand is the newly joined position are active
+  at that step, the rest are ``PRED_NONE`` — vacuous).
 
 Bit-identity with the single-pattern engine is a design invariant, not an
 aspiration: every generalized helper below mirrors its ``core.engine``
@@ -122,12 +129,18 @@ class RuleOps(NamedTuple):
 
     All shapes are per-rule; ``stack_rule_ops`` prepends the rule axis.
     ``type_rows[r] == -1`` marks an inactive buffer row (padding slots
-    ingest nothing, so their joins are empty).
+    ingest nothing, so their joins are empty).  ``has_neg``/``has_kleene``
+    gate the post-blocks *per rule* so buckets fused across shape classes
+    (a plain rule riding in a Kleene-capable bucket) stay bit-identical to
+    their solo engines: the blocks run bucket-wide, the rule-less ones are
+    masked to zero.
     """
 
     valid: np.ndarray        # ()  bool — False for padding slots
     window: np.ndarray       # ()  f32
     is_seq: np.ndarray       # ()  bool
+    has_neg: np.ndarray      # ()  bool — rule uses the negation post-block
+    has_kleene: np.ndarray   # ()  bool — rule uses the Kleene post-block
     type_rows: np.ndarray    # (rows,) i32 global type per buffer row
     op_t: np.ndarray         # (n, n) i32 predicate op codes
     a_attr: np.ndarray       # (n, n) i32
@@ -145,10 +158,20 @@ class RuleOps(NamedTuple):
 
 
 class ShareOps(NamedTuple):
-    """Prefix-sharing routing: U group representatives fan out to Qb rules."""
+    """Sub-join sharing lattice routing for one bucket.
 
-    rep_idx: jnp.ndarray     # (U,) i32 — rule slot of each group's rep
-    expand_idx: jnp.ndarray  # (Qb,) i32 — group index serving each rule
+    One entry per lattice depth ``d in [0, n - 2]``; depth ``d`` holds the
+    equivalence classes of the ``d + 2``-position sub-joins after plan step
+    ``d + 1``.  Classes are capacity-padded like rule slots (free classes
+    compute garbage that is never fanned out); growing a depth's class
+    capacity retraces the same callable, exactly like growing Qb.
+    """
+
+    rep: Tuple[jnp.ndarray, ...]     # [d]: (U_d,) i32 rule slot driving
+                                     #      each depth-d class's operands
+    parent: Tuple[jnp.ndarray, ...]  # [d]: (U_d,) i32 depth-(d-1) class
+                                     #      each class extends (d=0: zeros)
+    expand: jnp.ndarray              # (Qb,) i32 final-depth class per rule
 
 
 class RuleStepResult(NamedTuple):
@@ -162,14 +185,20 @@ class RuleStepResult(NamedTuple):
 
 
 def lower_rule(pattern: Pattern, bspec: BucketSpec) -> RuleOps:
-    """Lower one pattern into its bucket's row layout (host numpy)."""
+    """Lower one pattern into its bucket's row layout (host numpy).
+
+    The bucket spec is a *superset* contract, not an exact match: a rule
+    without negation / Kleene may ride in a bucket that carries those
+    post-blocks (cross-bucket fusion pads the spec up); the rule's
+    ``has_neg``/``has_kleene`` flags mask the blocks it does not use.
+    """
     spec = make_spec(pattern)
     if spec.n != bspec.n:
         raise ValueError(f"rule arity {spec.n} != bucket arity {bspec.n}")
-    if spec.has_neg != bspec.has_neg:
-        raise ValueError("rule/bucket negation mismatch")
-    if (spec.kleene_pos is not None) != bspec.has_kleene:
-        raise ValueError("rule/bucket Kleene mismatch")
+    if spec.has_neg and not bspec.has_neg:
+        raise ValueError("rule needs negation; bucket has no neg post-block")
+    if (spec.kleene_pos is not None) and not bspec.has_kleene:
+        raise ValueError("rule needs Kleene; bucket has no Kleene post-block")
     if spec.n_attrs > bspec.n_attrs:
         raise ValueError(
             f"rule has {spec.n_attrs} attributes; rulebook width is "
@@ -181,7 +210,9 @@ def lower_rule(pattern: Pattern, bspec: BucketSpec) -> RuleOps:
     n = bspec.n
     type_rows = list(spec.type_ids)
     if bspec.has_neg:
-        type_rows.append(spec.negated_type)
+        # A rule without negation in a neg-capable bucket gets an inert
+        # extra row (-1 ingests nothing, so its veto count is always 0).
+        type_rows.append(spec.negated_type if spec.has_neg else -1)
     ths = [spec.window, spec.window, 0.0, 0.0]
     for (a, b_) in _ordered_pairs(n):
         ths.append(float(spec.theta_t[a, b_]))
@@ -198,6 +229,8 @@ def lower_rule(pattern: Pattern, bspec: BucketSpec) -> RuleOps:
         valid=np.asarray(True),
         window=np.float32(spec.window),
         is_seq=np.asarray(bool(spec.is_seq)),
+        has_neg=np.asarray(bool(spec.has_neg)),
+        has_kleene=np.asarray(spec.kleene_pos is not None),
         type_rows=np.asarray(type_rows, np.int32),
         op_t=np.asarray(spec.op_t, np.int32),
         a_attr=np.asarray(spec.a_attr_t, np.int32),
@@ -222,6 +255,8 @@ def pad_rule(bspec: BucketSpec) -> RuleOps:
         valid=np.asarray(False),
         window=np.float32(1.0),
         is_seq=np.asarray(False),
+        has_neg=np.asarray(False),
+        has_kleene=np.asarray(False),
         type_rows=np.full((bspec.rows,), -1, np.int32),
         op_t=np.zeros((n, n), np.int32),
         a_attr=np.zeros((n, n), np.int32),
@@ -389,7 +424,7 @@ def _rule_finalize(bspec: BucketSpec, cfg: EngineConfig, ops: RuleOps,
                          buffers.attr[row][:, ops.neg_row_na[i]],
                          ops.neg_row_op[i], ops.neg_row_th[i]))
         cnt = _row_counts(cfg, rows, m, b)
-        veto = cnt > 0
+        veto = (cnt > 0) & ops.has_neg  # fused buckets: gate per rule
         neg_rejected = (completed & veto).sum().astype(jnp.int32)
         completed = completed & ~veto
 
@@ -412,7 +447,10 @@ def _rule_finalize(bspec: BucketSpec, cfg: EngineConfig, ops: RuleOps,
                          op, ops.theta[o, kp]))
         cnt = _row_counts(cfg, rows, m, b)
         comp = jnp.minimum(jnp.maximum(cnt - 1, 0), ops.kleene_bound)
-        closure = jnp.where(completed, comp, 0).sum().astype(jnp.int32)
+        # Non-Kleene rules in a fused bucket point kleene_pos at a real
+        # row; gating (not just masking padding) is what keeps them exact.
+        closure = jnp.where(ops.has_kleene & completed, comp,
+                            0).sum().astype(jnp.int32)
 
     return completed.sum().astype(jnp.int32), neg_rejected, closure
 
@@ -449,7 +487,7 @@ def _observe_one(bspec: BucketSpec, ops: RuleOps, chunk: Chunk):
 
 
 # ---------------------------------------------------------------------------
-# The bucket step: ingest -> shared prefixes -> per-rule suffixes
+# The bucket step: ingest -> shared sub-join lattice -> per-rule post-blocks
 # ---------------------------------------------------------------------------
 
 
@@ -462,18 +500,22 @@ def _make_bucket_step(bspec: BucketSpec, cfg: EngineConfig,
         step(state, chunk, ops, share, plans, t0, t1) -> (state, res)
 
     where ``state`` leads with Qb, ``ops`` is the stacked ``RuleOps``,
-    ``share`` routes the prefix groups and ``plans`` is the (Qb, n) order
-    matrix.  The monitored variant threads a per-rule ``MonitorState`` and
-    stacked ``LoweredInvariants`` and appends (violated, drift, rates,
-    sel) per rule.
+    ``share`` routes the sub-join sharing lattice and ``plans`` is the
+    (Qb, n) order matrix.  Join work walks the lattice depth by depth —
+    each depth extends its parent classes' partial-match sets by one plan
+    step, once per class — and only the finalize post-blocks run per rule,
+    on the final-depth sets fanned out through ``share.expand``.  The
+    monitored variant threads a per-rule ``MonitorState`` and stacked
+    ``LoweredInvariants`` and appends (violated, drift, rates, sel) per
+    rule.
     """
     from .invariants import eval_lowered
     from .stats import monitor_snapshot, monitor_update
 
     n = bspec.n
 
-    def prefix_one(buffers, ops, order, strips, t0):
-        """Leaf + first join step — the shareable two-position prefix."""
+    def open_one(buffers, ops, order, strips, t0):
+        """Leaf + opening join — the depth-0 sub-join, once per class."""
         pm = _rule_leaf(bspec, cfg, buffers, order[0], order[0], t0,
                         ops.window, cfg.m_cap)
         total = pm.valid.sum().astype(jnp.int32)
@@ -482,15 +524,18 @@ def _make_bucket_step(bspec: BucketSpec, cfg: EngineConfig,
             strips.lo_idx[0], strips.hi_idx[0], t0)
         return pm, total + created, ov
 
-    def suffix_one(buffers, ops, order, strips, pm, total, overflow,
-                   t0, t1):
-        """Remaining plan steps + finalize — always per rule."""
-        for i in range(2, n):  # static loop over the suffix steps
+    def extend_at(d: int):
+        """Depth-d extension: one plan step on the parent class's set."""
+        def extend_one(buffers, ops, order, strips, pm, total, overflow,
+                       t0):
             pm, created, ov = _rule_step(
-                bspec, cfg, buffers, ops, pm, order[i], strips.ops8[i - 1],
-                strips.lo_idx[i - 1], strips.hi_idx[i - 1], t0)
-            total = total + created
-            overflow = overflow + ov
+                bspec, cfg, buffers, ops, pm, order[d + 1], strips.ops8[d],
+                strips.lo_idx[d], strips.hi_idx[d], t0)
+            return pm, total + created, overflow + ov
+        return extend_one
+
+    def finalize_one(buffers, ops, pm, total, overflow, t0, t1):
+        """Completion + negation + Kleene — always per rule."""
         full, neg_rej, closure = _rule_finalize(
             bspec, cfg, ops, buffers, pm, t0, t1)
         return RuleStepResult(full, total, overflow, closure, neg_rej)
@@ -501,17 +546,25 @@ def _make_bucket_step(bspec: BucketSpec, cfg: EngineConfig,
         )(state, ops.type_rows)
         strips = jax.vmap(
             lambda o, r: build_rule_strips(bspec, o, r))(ops, plans)
-        # Shared prefixes: run U group representatives, fan out to Qb.
-        rep = lambda x: x[share.rep_idx]
-        pm_u, tot_u, ov_u = jax.vmap(
-            prefix_one, in_axes=(0, 0, 0, 0, None))(
-                jax.tree.map(rep, buffers), jax.tree.map(rep, ops),
-                plans[share.rep_idx], jax.tree.map(rep, strips), t0)
-        ex = lambda x: x[share.expand_idx]
+        take = lambda tree, idx: jax.tree.map(lambda x: x[idx], tree)
+        # Depth 0: leaf + opening join once per depth-0 class.
+        r0 = share.rep[0]
+        pm, tot, ov = jax.vmap(open_one, in_axes=(0, 0, 0, 0, None))(
+            take(buffers, r0), take(ops, r0), plans[r0],
+            take(strips, r0), t0)
+        # Interior depths: extend the parent class's set by one step, once
+        # per class (static loop — depths are trace constants).
+        for d in range(1, n - 1):
+            rd, pd = share.rep[d], share.parent[d]
+            pm, tot, ov = jax.vmap(
+                extend_at(d), in_axes=(0, 0, 0, 0, 0, 0, 0, None))(
+                    take(buffers, rd), take(ops, rd), plans[rd],
+                    take(strips, rd), take(pm, pd), tot[pd], ov[pd], t0)
+        # Fan the final-depth sets out to rules for the post-blocks.
+        ex = share.expand
         res = jax.vmap(
-            suffix_one, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))(
-                buffers, ops, plans, strips, jax.tree.map(ex, pm_u),
-                ex(tot_u), ex(ov_u), t0, t1)
+            finalize_one, in_axes=(0, 0, 0, 0, 0, None, None))(
+                buffers, ops, take(pm, ex), tot[ex], ov[ex], t0, t1)
         live = ops.valid
         res = RuleStepResult(*(jnp.where(live, x, 0) for x in res))
         return buffers, res

@@ -299,10 +299,170 @@ def first_event(violated: np.ndarray, overflow: np.ndarray,
 
     An *event* is an invariant flag on any partition, or (when escalation
     is on) a truncated join — both require the host before the *next*
-    chunk runs.  Returns None when the window is event-free.
+    chunk runs.  Returns None when the window is event-free.  Flags may
+    carry any trailing shape after the leading chunk axis — ``(S, K)`` for
+    the single-pattern fleet, ``(S, K, Qb)`` for the rulebook plane.
     """
-    ev = violated[:n_enabled].any(axis=1)
+    ev = violated[:n_enabled].reshape(n_enabled, -1).any(axis=1)
     if escalate:
-        ev = ev | (overflow[:n_enabled].sum(axis=1) > 0)
+        ev = ev | (overflow[:n_enabled].reshape(n_enabled, -1).sum(axis=1)
+                   > 0)
     idx = np.nonzero(ev)[0]
     return int(idx[0]) if idx.size else None
+
+
+# ---------------------------------------------------------------------------
+# The scanned rulebook plane: S chunks × K partitions × Qb rules / dispatch
+# ---------------------------------------------------------------------------
+
+
+class RulebookXs(NamedTuple):
+    """Rulebook scan inputs; every leaf has a leading ``S`` axis.
+
+    The rulebook control plane deploys plan rows immediately (serving
+    semantics: no [36] migration split), so the only reactive control is
+    the invariant flag — ``enabled`` implements tail padding and the
+    optimistic prefix re-run exactly as on the single-pattern plane.
+    """
+
+    chunk: Chunk        # (S, K, cap) / (S, K, cap, A) fields
+    t0: jax.Array       # (S,) f32
+    t1: jax.Array       # (S,) f32
+    enabled: jax.Array  # (S,) bool
+
+
+class RulebookOut(NamedTuple):
+    """Rulebook scan outputs; every leaf has a leading ``(S, K, Qb)``."""
+
+    full: jax.Array      # i32 full matches per rule
+    pm: jax.Array        # i32 partial matches materialized
+    overflow: jax.Array  # i32 candidates dropped by capacity
+    closure: jax.Array   # i32 Kleene companion count
+    neg: jax.Array       # i32 negation vetoes
+    violated: jax.Array  # bool per-(q, k) invariant flags
+    drift: jax.Array     # f32 relative margins (monitored; else -inf)
+    rates: jax.Array     # (S, K, Qb, n) f32 monitor snapshot per chunk
+    sel: jax.Array       # (S, K, Qb, n, n) f32
+
+
+def stack_rulebook_window(chunks: Sequence[Chunk], t0s, t1s,
+                          s_pad: int) -> RulebookXs:
+    """Stack a window of stacked ``(K, ...)`` chunks into rulebook scan
+    inputs, padding short windows with disabled repeats of the last chunk
+    (one compiled scan serves every window length)."""
+    s = len(chunks)
+    if s == 0:
+        raise ValueError("empty superchunk window")
+    padded = list(chunks) + [chunks[-1]] * (s_pad - s)
+    chunk = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+    t0a = np.zeros(s_pad, np.float32)
+    t1a = np.zeros(s_pad, np.float32)
+    t0a[:s] = np.asarray(t0s, np.float32)
+    t1a[:s] = np.asarray(t1s, np.float32)
+    enabled = np.zeros(s_pad, bool)
+    enabled[:s] = True
+    return RulebookXs(chunk=chunk, t0=jnp.asarray(t0a),
+                      t1=jnp.asarray(t1a), enabled=jnp.asarray(enabled))
+
+
+def make_rulebook_scan(bspec, cfg, k: int, monitored: bool,
+                       laplace: float = 1.0, mesh=None):
+    """Compile (or fetch from the trace memo) the scanned rulebook plane.
+
+    Returns a ``multipattern._Plane`` whose ``fn`` has signature::
+
+        scan(state, monitor, ops, share, plans, lowered, xs)
+            -> (state, monitor, RulebookOut)
+
+    with ``state``/``monitor``/``plans``/``lowered`` leading with K,
+    ``ops``/``share`` fleet-wide, and ``xs`` a :class:`RulebookXs`.
+    ``monitor``/``lowered`` are ``None`` when unmonitored.  Like the
+    per-chunk rulebook plane, the memo key excludes every capacity (Qb,
+    lattice class counts, S): growing a bucket under superchunk re-enters
+    the SAME jitted callable with a new shape — one retrace, no new memo
+    entry.  Meshed planes are never shared (mesh objects pin device
+    orders).
+    """
+    from .fleet import _shared_trace
+    from .multipattern import _Plane, _make_bucket_step
+
+    key = (None if mesh is not None
+           else ("rulebook-scan", bspec, cfg, int(k), bool(monitored),
+                 float(laplace)))
+
+    def build() -> _Plane:
+        plane = _Plane()
+        step = _make_bucket_step(bspec, cfg, monitored, laplace)
+        n = bspec.n
+        if monitored:
+            kstep = jax.vmap(
+                step, in_axes=(0, 0, 0, None, None, 0, 0, None, None))
+        else:
+            kstep = jax.vmap(step, in_axes=(0, 0, None, None, 0, None, None))
+
+        def body(ops, share, plans, lowered, carry, x: RulebookXs):
+            def run(carry):
+                state, monitor = carry
+                kk, qb = state.ts.shape[:2]
+                if monitored:
+                    state, monitor, res, violated, drift, rates, sel = \
+                        kstep(state, monitor, x.chunk, ops, share, plans,
+                              lowered, x.t0, x.t1)
+                else:
+                    state, res = kstep(state, x.chunk, ops, share, plans,
+                                       x.t0, x.t1)
+                    violated = jnp.zeros((kk, qb), bool)
+                    drift = jnp.full((kk, qb), NEG_INF, jnp.float32)
+                    rates = jnp.zeros((kk, qb, n), jnp.float32)
+                    sel = jnp.zeros((kk, qb, n, n), jnp.float32)
+                out = RulebookOut(res.full, res.pm, res.overflow,
+                                  res.closure, res.neg, violated, drift,
+                                  rates, sel)
+                return (state, monitor), out
+
+            def skip(carry):
+                state, _ = carry
+                kk, qb = state.ts.shape[:2]
+                out = RulebookOut(
+                    *(jnp.zeros((kk, qb), jnp.int32) for _ in range(5)),
+                    jnp.zeros((kk, qb), bool),
+                    jnp.full((kk, qb), NEG_INF, jnp.float32),
+                    jnp.zeros((kk, qb, n), jnp.float32),
+                    jnp.zeros((kk, qb, n, n), jnp.float32))
+                return carry, out
+
+            return jax.lax.cond(x.enabled, run, skip, carry)
+
+        def scan_fn(state, monitor, ops, share, plans, lowered, xs):
+            plane.traces += 1  # python side effect: once per (re)trace
+            carry, ys = jax.lax.scan(
+                functools.partial(body, ops, share, plans, lowered),
+                (state, monitor), xs)
+            return carry[0], carry[1], ys
+
+        plane.fn = jax.jit(_shard_rulebook_scan(scan_fn, mesh))
+        return plane
+
+    return _shared_trace(key, build)
+
+
+def _shard_rulebook_scan(fn, mesh):
+    """shard_map the rulebook scan over the 1-D "cep" mesh: state and
+    per-partition control K-lead, ops/share are fleet-wide (replicated),
+    xs chunks lead with (S, K).  Partitions stay independent — zero
+    collectives, sharding never changes semantics."""
+    if mesh is None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from ..distributed.sharding import CEP_AXIS
+
+    kl = PartitionSpec(CEP_AXIS)
+    skl = PartitionSpec(None, CEP_AXIS)
+    rep = PartitionSpec()
+    xs_spec = RulebookXs(chunk=skl, t0=rep, t1=rep, enabled=rep)
+    in_specs = (kl, kl, rep, rep, kl, kl, xs_spec)
+    out_specs = (kl, kl, skl)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

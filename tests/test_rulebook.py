@@ -207,9 +207,10 @@ def test_rulebook_input_validation(rng):
     with pytest.raises(ValueError, match="OR"):
         open_rulebook([P.or_(P.seq(0, 1).within(2.0),
                              P.seq(1, 2).within(2.0))])
-    with pytest.raises(ValueError, match="superchunk"):
-        open_rulebook([P.seq(0, 1).within(2.0)],
-                      config=RuntimeConfig(superchunk=4))
+    with pytest.raises(ValueError, match="sharing"):
+        RuntimeConfig(sharing="bogus")
+    with pytest.raises(ValueError, match="partitions"):
+        open_rulebook([P.seq(0, 1).within(2.0)], partitions=0)
     with pytest.raises(ValueError, match="invariant"):
         open_rulebook([P.seq(0, 1).within(2.0)], monitor=True,
                       config=RuntimeConfig(policy="threshold"))

@@ -1,0 +1,129 @@
+"""Sub-join sharing lattice: pure work elimination, bitwise-equal counts.
+
+``config.sharing`` selects how much interior join work a bucket's rules
+share ("lattice" / "prefix" / "none"); a shared node's partial-match set
+fans out to every extension, so NO counter may move when the mode
+changes.  The property test drives random rule sets through all three
+modes; the flowsense regression pins the structural claim of the PR —
+the full lattice shares strictly more than opening-prefix-only sharing
+on that scenario's 3-rule tenant set.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cep import P, RuntimeConfig
+from repro.cep.rulebook import open_rulebook
+
+from test_rulebook import A, K, make_chunks, rule_pool
+
+MODES = ("lattice", "prefix", "none")
+
+
+def _cfg(mode):
+    return RuntimeConfig(buffer_capacity=24, match_capacity=512,
+                         estimator_buckets=8, sharing=mode)
+
+
+def random_rules(rng, q):
+    """Random mixed-arity rule set, depth <= 3 (arity <= 4), biased toward
+    shared chains: types and thresholds are drawn from small pools so
+    independent rules collide on opening joins and deeper sub-joins."""
+    rules = []
+    for _ in range(q):
+        n = int(rng.integers(2, 5))
+        types = [int(t) for t in rng.choice(4, size=n, replace=False)]
+        th = float(rng.choice([0.2, 0.4]))
+        builder = (P.seq(*types) if rng.random() < 0.7
+                   else P.and_(*types))
+        if n >= 2 and rng.random() < 0.8:
+            builder = builder.where(P.attr(0, 0) < P.attr(1, 0) + th)
+        rules.append(builder.within(2.0).attrs(A))
+    return rules
+
+
+@pytest.mark.parametrize("q", [2, 8])
+def test_sharing_modes_bit_identical(rng, q):
+    rule_seed = np.random.default_rng(int(rng.integers(1 << 30)))
+    rules = random_rules(rule_seed, q)
+    chunks = make_chunks(rng, 8)
+    books = {m: open_rulebook(rules, partitions=K, monitor=True,
+                              config=_cfg(m)) for m in MODES}
+    outs = {m: [] for m in MODES}
+    for stacked, _, t0, t1 in chunks:
+        for m, rb in books.items():
+            outs[m].append(np.asarray(rb.step(stacked, t0, t1)))
+    for m in MODES:
+        assert books[m].telemetry().overflow == 0
+    base = books["lattice"]
+    for m in ("prefix", "none"):
+        assert np.array_equal(
+            np.stack(outs[m]), np.stack(outs["lattice"])), m
+        assert np.array_equal(books[m].match_counts, base.match_counts), m
+        assert books[m].telemetry().violations == \
+            base.telemetry().violations, m
+    # the lattice never executes MORE nodes than the weaker modes
+    assert base.sharing_ratio() >= books["prefix"].sharing_ratio()
+    assert books["none"].sharing_ratio() == 1.0
+
+
+def test_deep_pair_lattice_beats_prefix_structurally():
+    """Two 4-arity rules sharing positions 0-1-2 (same types, same
+    predicate rows) diverge only at the last join: the lattice shares two
+    depths (ratio 6/4 = 1.5), prefix-only shares one (6/5 = 1.2)."""
+    rules = [
+        P.seq(0, 1, 2, 3).where(P.attr(0, 0) < P.attr(1, 0) + 0.4)
+            .within(3.0).attrs(A),
+        P.seq(0, 1, 2, 4).where(P.attr(0, 0) < P.attr(1, 0) + 0.4)
+            .within(3.0).attrs(A),
+    ]
+    lat = open_rulebook(rules, partitions=K, monitor=False,
+                        config=_cfg("lattice"))
+    pre = open_rulebook(rules, partitions=K, monitor=False,
+                        config=_cfg("prefix"))
+    assert lat.sharing_ratio() > pre.sharing_ratio() > 1.0
+
+
+def test_flowsense_lattice_regression():
+    """The flowsense tenant's 3-rule set pins BOTH directions of the
+    lattice contract: the ratio must be >= opening-prefix-only (the PR's
+    claim), and — because alert/ack/combo are structurally disjoint
+    (different arities, types, windows) — every mode must report exactly
+    1.0: the chain keys may never manufacture sharing between distinct
+    sub-joins."""
+    from repro.data.scenarios.flowsense import rulebook_patterns
+
+    rules = rulebook_patterns()
+    assert len(rules) == 3
+    ratios = {}
+    for m in MODES:
+        rb = open_rulebook(rules, partitions=2, monitor=False,
+                           config=_cfg(m))
+        ratios[m] = rb.sharing_ratio()
+    assert ratios["lattice"] >= ratios["prefix"]
+    assert ratios["lattice"] == ratios["prefix"] == ratios["none"] == 1.0
+
+
+def test_sharing_survives_hot_add_remove(rng):
+    """Hot-added rules start singleton chains; removing a shared class's
+    representative reroutes the class without disturbing counters."""
+    rules = rule_pool()[:4]
+    chunks = make_chunks(rng, 6)
+    rb = open_rulebook(rules, partitions=K, monitor=True,
+                       config=_cfg("lattice"), spare_slots=1)
+    solo = open_rulebook(rules, partitions=K, monitor=True,
+                         config=_cfg("none"), spare_slots=1)
+    for stacked, _, t0, t1 in chunks[:3]:
+        rb.step(stacked, t0, t1)
+        solo.step(stacked, t0, t1)
+    before = rb.sharing_ratio()
+    rb.add_rule(rule_pool()[6])
+    solo.add_rule(rule_pool()[6])
+    rb.remove_rule(0)          # representative of the shared (0, 1) class
+    solo.remove_rule(0)
+    assert rb.sharing_ratio() <= before
+    for stacked, _, t0, t1 in chunks[3:]:
+        rb.step(stacked, t0, t1)
+        solo.step(stacked, t0, t1)
+    assert rb.telemetry().overflow == 0
+    assert np.array_equal(rb.match_counts, solo.match_counts)

@@ -1,0 +1,176 @@
+"""Superchunked rulebook stepping: bitwise equivalence at every S.
+
+``config.superchunk = S`` rolls S chunks per bucket through one compiled
+``lax.scan`` dispatch; the load-bearing property is that NOTHING about
+the counters or the adaptation trajectory depends on S.  The grid here
+drives the optimistic window re-run hard — a rate-skewed phase-2 stream
+makes invariant flags fire mid-window, so accepted prefixes, replan
+points and redeployed plans must all land exactly where per-chunk
+stepping puts them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cep as cep
+from repro.cep import P, RuntimeConfig
+from repro.cep.rulebook import open_rulebook
+from repro.core import fleet
+from repro.core.engine import Chunk
+from repro.core.fleet import FleetChunk
+
+from test_rulebook import A, CAP, K, make_chunks, rule_pool
+
+CFG_KW = dict(buffer_capacity=24, match_capacity=512,
+              estimator_buckets=8)
+
+
+def skewed_chunks(rng, n_chunks, k=K):
+    """Two-phase stream: uniform types, then rates skewed to types 3/4 —
+    the shift drags selectivity estimates across invariant boundaries so
+    flags (and replans) fire inside scan windows, not just at cold start.
+    """
+    out = []
+    for step in range(n_chunks):
+        t0, t1 = float(step), float(step + 1)
+        phase2 = step >= n_chunks // 2
+        parts = []
+        for _ in range(k):
+            n = int(rng.integers(5, 10))
+            if phase2:
+                tid = rng.choice(5, size=n,
+                                 p=[0.05, 0.05, 0.1, 0.4, 0.4])
+            else:
+                tid = rng.integers(0, 5, size=n)
+            tid = tid.astype(np.int32)
+            ts = np.sort(rng.uniform(t0, t1, size=n)).astype(np.float32)
+            attr = rng.normal(size=(n, A)).astype(np.float32)
+            if phase2:
+                attr += 0.8
+            pad = CAP - n
+            parts.append(Chunk(
+                type_id=jnp.asarray(np.pad(tid, (0, pad),
+                                           constant_values=-1)),
+                ts=jnp.asarray(np.pad(ts, (0, pad))),
+                attr=jnp.asarray(np.pad(attr.astype(np.float32),
+                                        ((0, pad), (0, 0)))),
+                valid=jnp.asarray(np.arange(CAP) < n)))
+        out.append((jax.tree.map(lambda *xs: jnp.stack(xs), *parts),
+                    t0, t1))
+    return out
+
+
+@pytest.mark.parametrize("s", [2, 3, 8])
+def test_superchunk_grid_matches_per_chunk_and_sessions(rng, s):
+    """S in {2, 3, 8} over 10 chunks: exercises full windows, a tail
+    window shorter than S, and flag-triggered mid-window splits."""
+    rules = rule_pool()[:4]
+    chunks = skewed_chunks(rng, 10)
+    edges = [(t0, t1) for _, t0, t1 in chunks]
+    cs = [c for c, _, _ in chunks]
+
+    rb_pc = open_rulebook(rules, partitions=K, monitor=True,
+                          config=RuntimeConfig(**CFG_KW))
+    sessions = [cep.open(r, partitions=K, monitor=True,
+                         config=RuntimeConfig(**CFG_KW)) for r in rules]
+    per_chunk = np.stack([rb_pc.step(c, t0, t1) for c, t0, t1 in chunks])
+    sess_counts = np.zeros((len(rules), K), np.int64)
+    for c, t0, t1 in chunks:
+        for i, sess in enumerate(sessions):
+            sess_counts[i] += np.asarray(sess.step(c, t0, t1))
+
+    rb_sc = open_rulebook(rules, partitions=K, monitor=True,
+                          config=RuntimeConfig(superchunk=s, **CFG_KW))
+    out = rb_sc.step_superchunk(cs, edges)
+
+    assert rb_pc.telemetry().overflow == 0
+    assert rb_sc.telemetry().overflow == 0
+    # the stream must actually exercise the re-run path to mean anything
+    assert rb_pc.telemetry().violations > 0
+    assert np.array_equal(out, per_chunk)
+    assert np.array_equal(rb_sc.match_counts, rb_pc.match_counts)
+    assert np.array_equal(rb_sc.match_counts, sess_counts)
+    assert rb_sc.telemetry().violations == rb_pc.telemetry().violations
+    assert rb_sc.telemetry().replans == rb_pc.telemetry().replans
+
+
+def test_superchunk_run_segments_match_step(rng):
+    """run() windows the stream through step_superchunk; segmented feeds
+    and an S that does not divide the stream length stay bit-identical."""
+    rules = rule_pool()[:3]
+    chunks = make_chunks(rng, 11)
+    fcs = [FleetChunk(chunk=c, t0=t0, t1=t1) for c, _, t0, t1 in chunks]
+
+    rb_pc = open_rulebook(rules, partitions=K, monitor=True,
+                          config=RuntimeConfig(**CFG_KW))
+    for c, _, t0, t1 in chunks:
+        rb_pc.step(c, t0, t1)
+
+    rb_sc = open_rulebook(rules, partitions=K, monitor=True,
+                          config=RuntimeConfig(superchunk=4, **CFG_KW))
+    tel_a = rb_sc.run(fcs[:5])
+    tel_b = rb_sc.run(fcs[5:])
+    assert np.array_equal(rb_sc.match_counts, rb_pc.match_counts)
+    assert tel_a.chunks + tel_b.chunks == 11
+    assert rb_sc.telemetry().violations == rb_pc.telemetry().violations
+
+
+def test_superchunk_unmonitored_path(rng):
+    """Non-monitored rulebooks scan too (no flags, no re-runs — the host
+    surfaces only at window boundaries) and stay bit-identical."""
+    rules = rule_pool()[:4]
+    chunks = make_chunks(rng, 9)
+    edges = [(t0, t1) for _, _, t0, t1 in chunks]
+    cs = [c for c, _, _, _ in chunks]
+
+    rb_pc = open_rulebook(rules, partitions=K, monitor=False,
+                          config=RuntimeConfig(**CFG_KW))
+    per_chunk = np.stack([rb_pc.step(c, t0, t1)
+                          for c, _, t0, t1 in chunks])
+    rb_sc = open_rulebook(rules, partitions=K, monitor=False,
+                          config=RuntimeConfig(superchunk=4, **CFG_KW))
+    out = rb_sc.step_superchunk(cs, edges)
+    assert np.array_equal(out, per_chunk)
+    assert np.array_equal(rb_sc.match_counts, rb_pc.match_counts)
+
+
+def test_superchunk_mesh_d1_matches(rng):
+    rules = rule_pool()[:2]
+    chunks = make_chunks(rng, 6)
+    edges = [(t0, t1) for _, _, t0, t1 in chunks]
+    cs = [c for c, _, _, _ in chunks]
+    rb_mesh = open_rulebook(
+        rules, partitions=K, monitor=True,
+        config=RuntimeConfig(superchunk=4, mesh=1, **CFG_KW))
+    rb_plain = open_rulebook(
+        rules, partitions=K, monitor=True,
+        config=RuntimeConfig(superchunk=4, **CFG_KW))
+    a = rb_mesh.step_superchunk(cs, edges)
+    b = rb_plain.step_superchunk(cs, edges)
+    assert np.array_equal(a, b)
+    assert np.array_equal(rb_mesh.match_counts, rb_plain.match_counts)
+
+
+def test_growth_under_superchunk_reenters_memo(rng):
+    """Bucket growth while scanning: the grown Qb re-enters the SAME
+    memoized scan callable — exactly one retrace, zero new memo entries.
+    """
+    cfg = RuntimeConfig(superchunk=4, buffer_capacity=20,
+                        match_capacity=512, estimator_buckets=8)
+    rules = [rule_pool()[3], rule_pool()[7]]  # one full n=2 bucket
+    rb = open_rulebook(rules, partitions=K, monitor=True, config=cfg)
+    chunks = make_chunks(rng, 12)
+    edges = [(t0, t1) for _, _, t0, t1 in chunks]
+    cs = [c for c, _, _, _ in chunks]
+    rb.step_superchunk(cs[:4], edges[:4])
+    pre_traces = rb.trace_count()
+    pre_memo = len(fleet._TRACE_MEMO)
+    rb.add_rule(P.seq(1, 3).within(1.0).attrs(A))  # full bucket -> grow
+    rb.step_superchunk(cs[4:8], edges[4:8])
+    assert rb.trace_count() == pre_traces + 1
+    assert len(fleet._TRACE_MEMO) == pre_memo
+    # and the grown shape is now warm: further windows retrace nothing
+    rb.step_superchunk(cs[8:], edges[8:])
+    assert rb.trace_count() == pre_traces + 1
